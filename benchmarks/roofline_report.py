@@ -1,0 +1,136 @@
+"""Build the EXPERIMENTS.md roofline/dry-run tables from the artifacts
+written by repro.launch.dryrun.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--dir artifacts/dryrun]
+"""
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirname):
+    cells = {}
+    for fn in glob.glob(os.path.join(dirname, "*.json")):
+        with open(fn) as fh:
+            d = json.load(fh)
+        key = (d["arch"], d["shape"], d["mesh"], d.get("tag") or "")
+        cells[key] = d
+    return cells
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def fmt_b(x):
+    if x is None:
+        return "—"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024:
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def enrich(d):
+    """Add the fused-HBM model terms (see launch/roofline_model.py)."""
+    if d.get("status") != "ok" or "compute_s" not in d:
+        return d
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro import configs as C
+    from repro.launch import mesh as M
+    from repro.launch.roofline_model import estimate_hbm_bytes
+    from repro.models.config import SHAPES
+    cfg = C.get_config(d["arch"])
+    shape = SHAPES[d["shape"]]
+    est = estimate_hbm_bytes(cfg, shape, n_dev=d["n_devices"], dp=d["dp"],
+                             tp=16, n_micro=d.get("n_micro", 1))
+    d["memory_model_s"] = est / M.HBM_BW
+    terms = {"compute_s": d["compute_s"], "memory_model_s": d["memory_model_s"],
+             "collective_s": d["collective_s"]}
+    d["dominant_model"] = max(terms, key=terms.get)
+    bound = max(terms.values())
+    d["roofline_fraction_model"] = d["compute_s"] / bound if bound else 0.0
+    return d
+
+
+def roofline_table(cells, mesh="single", tag=""):
+    lines = [
+        "| arch | shape | compute | mem(xla-ub) | mem(fused) | collective | "
+        "dominant | MODEL/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, m, t), d in sorted(
+            cells.items(), key=lambda kv: (kv[0][0], ORDER.index(kv[0][1]))):
+        if m != mesh or t != tag:
+            continue
+        if d["status"] == "skip":
+            lines.append(f"| {arch} | {shape} | SKIP | | | | | | "
+                         f"{d['reason'][:40]}… |")
+            continue
+        d = enrich(d)
+        ratio = d.get("model_flops_ratio")
+        lines.append(
+            f"| {arch} | {shape} | {fmt_s(d.get('compute_s'))} | "
+            f"{fmt_s(d.get('memory_s'))} | {fmt_s(d.get('memory_model_s'))} | "
+            f"{fmt_s(d.get('collective_s'))} | "
+            f"{d.get('dominant_model','?').replace('_s','')} | "
+            f"{ratio:.2f} | {d.get('roofline_fraction_model', 0):.3f} |"
+            if ratio is not None else
+            f"| {arch} | {shape} | ? | ? | ? | ? | ? | ? | ? |")
+    return "\n".join(lines)
+
+
+def dryrun_table(cells, mesh):
+    lines = [
+        "| arch | shape | status | compile | peak bytes/dev | "
+        "AG | AR | RS | A2A | CP |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, m, t), d in sorted(
+            cells.items(), key=lambda kv: (kv[0][0], ORDER.index(kv[0][1]))):
+        if m != mesh or t:
+            continue
+        if d["status"] == "skip":
+            lines.append(f"| {arch} | {shape} | SKIP (documented) | | | | | | | |")
+            continue
+        mem = d.get("memory") or {}
+        peak = mem.get("peak_bytes") or mem.get("temp_bytes")
+        c = d.get("collectives_full", {})
+
+        def n(op):
+            return c.get(op, {}).get("count", 0)
+
+        lines.append(
+            f"| {arch} | {shape} | ok | {d.get('compile_wall_s','?')}s | "
+            f"{fmt_b(peak)} | {n('all-gather')} | {n('all-reduce')} | "
+            f"{n('reduce-scatter')} | {n('all-to-all')} | "
+            f"{n('collective-permute')} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    cells = load(args.dir)
+    print("## Roofline (single-pod 16x16, per-chip terms)\n")
+    print(roofline_table(cells, "single"))
+    print("\n## Dry-run: single-pod\n")
+    print(dryrun_table(cells, "single"))
+    print("\n## Dry-run: multi-pod (2x16x16)\n")
+    print(dryrun_table(cells, "multi"))
+
+
+if __name__ == "__main__":
+    main()

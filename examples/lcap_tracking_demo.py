@@ -1,0 +1,82 @@
+"""LCAP demo — the paper's system end to end, over TCP:
+
+- 3 producers (simulated MDTs / training hosts) journal filesystem-style
+  and training events;
+- the LCAP service aggregates them (greedy batched reads) and publishes
+  to two persistent consumer GROUPS (load-balanced within each) plus an
+  EPHEMERAL observer that attaches mid-stream;
+- compensating creat/unlink pairs are compacted by a proxy module;
+- collective acknowledgement trims the producer journals only when both
+  groups acked.
+
+    PYTHONPATH=src python examples/lcap_tracking_demo.py
+"""
+
+import time
+
+from repro.core import records as R
+from repro.core.llog import Llog
+from repro.core.modules import CancelCompensating
+from repro.core.proxy import LcapProxy
+from repro.core.reader import RemoteReader
+from repro.core.server import LcapService
+from repro.track import ActivityTracker
+
+
+def main() -> None:
+    trackers = [ActivityTracker(run_id=7, host_id=h, jobid=f"demo-job-{h}")
+                for h in range(3)]
+    proxy = LcapProxy({t.llog.producer_id: t.llog for t in trackers},
+                      modules=[CancelCompensating()])
+    svc = LcapService(proxy).start()
+    print(f"LCAP service on {svc.address}")
+
+    # persistent groups: 2x metrics + 1x audit; ephemeral: dashboard
+    metrics = [RemoteReader(svc.address, "metrics") for _ in range(2)]
+    audit = RemoteReader(svc.address, "audit")
+
+    for step in range(3):
+        for t in trackers:
+            t.step_commit(step, loss=2.0 - 0.3 * step, step_time_s=0.1,
+                          tokens=4096)
+    # compensating pair -> compacted by the module, never delivered
+    trackers[0].fs_op(R.CL_CREATE, oid=99, name=b"scratch.tmp")
+    trackers[0].fs_op(R.CL_UNLINK, oid=99, name=b"scratch.tmp")
+
+    dashboard = RemoteReader(svc.address, None, mode="ephemeral")
+    trackers[1].heartbeat(3, step_time_s=0.12)   # emitted after attach
+
+    time.sleep(0.3)
+    got_m = [m.fetch(100) for m in metrics]
+    got_a = audit.fetch(100)
+    got_d = dashboard.fetch(100)
+
+    print(f"metrics group: {len(got_m[0])} + {len(got_m[1])} records "
+          f"(load-balanced, total {len(got_m[0]) + len(got_m[1])})")
+    print(f"audit group:   {len(got_a)} records (same stream, own copy)")
+    print(f"ephemeral dashboard: {len(got_d)} records (no history)")
+    assert len(got_d) < len(got_a), "ephemeral reader must miss history"
+
+    for pid, rec in got_m[0]:
+        metrics[0].ack(pid, rec.index)
+    for pid, rec in got_m[1]:
+        metrics[1].ack(pid, rec.index)
+    time.sleep(0.2)
+    first = trackers[0].llog.first_index
+    print(f"after metrics-only acks, journal trim point: {first} "
+          f"(audit group still owes acks)")
+    for pid, rec in got_a:
+        audit.ack(pid, rec.index)
+    time.sleep(0.3)
+    print(f"after audit acks too, journal trimmed to: "
+          f"{trackers[0].llog.first_index}..{trackers[0].llog.last_index}")
+    print(f"proxy stats: {proxy.stats}")
+
+    for r in (*metrics, audit, dashboard):
+        r.close()
+    svc.stop()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Serving demo: batched prefill + KV-cache decode on a reduced config,
+plus LCAP-driven cache invalidation between replicas (paper §IV-C-1).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+
+import sys
+
+from repro.launch import serve
+
+
+def main() -> None:
+    sys.argv = [sys.argv[0], "--arch", "granite-8b", "--smoke",
+                "--batch", "4", "--prompt-len", "12", "--gen-len", "6"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .ckpt import (AsyncCheckpointer, restore_checkpoint, save_checkpoint,
+                   latest_step)
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "AsyncCheckpointer",
+           "latest_step"]

@@ -1,0 +1,121 @@
+"""Sharded checkpoint save/restore riding the LCAP stream.
+
+Save: the param/opt pytree is flattened; leaves are round-robined into
+``n_shards`` .npz files (one per writer host in a real deployment).
+Each completed shard emits a CL_CKPT_WRITE record; the load-balanced
+CheckpointCommitter group publishes the manifest once all shards have
+been seen (tests/test_track.py), making the commit protocol exactly the
+paper's collective-acknowledgement pattern.
+
+Restore: read the manifest (or directly the shard files), reassemble,
+then ``jax.device_put`` against the CURRENT mesh's shardings — which is
+also how elastic resharding works (the checkpoint is mesh-agnostic).
+
+``AsyncCheckpointer`` overlaps serialization/IO with training (the host
+thread writes while the next step runs on device).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def save_checkpoint(tree, step: int, out_dir: str, *, n_shards: int = 4,
+                    tracker=None) -> List[str]:
+    """Write ``n_shards`` npz files + a local index; emits CKPT_WRITE
+    records when a tracker is given.  Returns the shard paths."""
+    os.makedirs(out_dir, exist_ok=True)
+    flat = _flatten(tree)
+    paths = []
+    for shard in range(n_shards):
+        arrs = {str(i): np.asarray(leaf)
+                for i, (name, leaf) in enumerate(flat)
+                if i % n_shards == shard}
+        path = os.path.join(out_dir, f"step-{step:08d}-shard{shard}.npz")
+        tmp = path + ".tmp.npz"
+        np.savez(tmp, **arrs)
+        os.replace(tmp, path)
+        paths.append(path)
+        if tracker is not None:
+            tracker.ckpt_write(step, shard_id=shard,
+                               nbytes=os.path.getsize(path), path=path,
+                               total_shards=n_shards)
+    index = {"step": step, "n_shards": n_shards,
+             "leaves": [name for name, _ in flat]}
+    with open(os.path.join(out_dir, f"step-{step:08d}.index.json"),
+              "w") as fh:
+        json.dump(index, fh)
+    return paths
+
+
+def latest_step(out_dir: str) -> Optional[int]:
+    if not os.path.isdir(out_dir):
+        return None
+    steps = [int(f.split("-")[1].split(".")[0])
+             for f in os.listdir(out_dir) if f.endswith(".index.json")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(tree_like, step: int, out_dir: str,
+                       shardings=None):
+    """Rebuild the pytree of ``tree_like`` (structure donor) from the
+    shard files.  ``shardings``: optional matching pytree of
+    NamedSharding — THIS is where elastic resharding happens: the
+    checkpoint is mesh-agnostic and lands on whatever mesh is current."""
+    with open(os.path.join(out_dir, f"step-{step:08d}.index.json")) as fh:
+        index = json.load(fh)
+    n_shards = index["n_shards"]
+    arrays: Dict[int, np.ndarray] = {}
+    for shard in range(n_shards):
+        path = os.path.join(out_dir, f"step-{step:08d}-shard{shard}.npz")
+        with np.load(path) as z:
+            for k in z.files:
+                arrays[int(k)] = z[k]
+    leaves_order = [arrays[i] for i in range(len(arrays))]
+    treedef = jax.tree_util.tree_structure(tree_like)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves_order)
+    if shardings is not None:
+        rebuilt = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), rebuilt, shardings)
+    return rebuilt
+
+
+class AsyncCheckpointer:
+    """Background checkpoint writer: snapshot on the caller thread
+    (cheap host copies), serialize+write off-thread."""
+
+    def __init__(self, out_dir: str, n_shards: int = 4, tracker=None):
+        self.out_dir = out_dir
+        self.n_shards = n_shards
+        self.tracker = tracker
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._last: Optional[Future] = None
+
+    def submit(self, tree, step: int) -> Future:
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self.wait()
+        self._last = self._pool.submit(
+            save_checkpoint, host_tree, step, self.out_dir,
+            n_shards=self.n_shards, tracker=self.tracker)
+        return self._last
+
+    def wait(self) -> None:
+        if self._last is not None:
+            self._last.result()
+            self._last = None
+
+    def close(self) -> None:
+        self.wait()
+        self._pool.shutdown()

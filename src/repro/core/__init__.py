@@ -1,0 +1,24 @@
+"""repro.core — the paper's contribution: distributed activity tracking.
+
+Faithful implementation of "Distributed Lustre activity tracking"
+(Doreau, CS.DC 2015): extensible changelog records (LU-1996 layout),
+per-producer journals with collective acknowledgement, and the LCAP
+aggregate-and-publish proxy with consumer groups, load balancing,
+at-least-once delivery, ephemeral readers and stream modules.
+"""
+
+from . import records
+from .ack import AckTracker
+from .llog import Llog
+from .modules import (CancelCompensating, CoalesceHeartbeats,
+                      ReorderByTarget, TypeFilter)
+from .proxy import EPHEMERAL, PERSISTENT, LcapProxy
+from .reader import LocalReader, RemoteReader
+from .server import LcapService
+
+__all__ = [
+    "records", "AckTracker", "Llog", "LcapProxy", "LcapService",
+    "LocalReader", "RemoteReader", "PERSISTENT", "EPHEMERAL",
+    "CancelCompensating", "CoalesceHeartbeats", "ReorderByTarget",
+    "TypeFilter",
+]

@@ -1,0 +1,57 @@
+"""Acknowledgement watermark tracking for at-least-once delivery.
+
+Per (group, producer): the upstream-ackable watermark is the highest
+index W such that every *delivered* index <= W has been acknowledged.
+Acks may arrive out of order (batched/delayed, paper §II) and — because
+proxy modules may reorder or drop records (paper §III-A) — deliveries
+may be out of index order and sparse.
+"""
+
+from __future__ import annotations
+
+from bisect import bisect_right, insort
+from typing import List, Set
+
+
+class AckTracker:
+    def __init__(self, start: int = 0):
+        self._outstanding: List[int] = []   # sorted, delivered & un-acked
+        self._acked: Set[int] = set()       # acked but blocked by a hole
+        self._watermark = start
+
+    @property
+    def watermark(self) -> int:
+        return self._watermark
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._outstanding)
+
+    def deliver(self, index: int) -> None:
+        if index <= self._watermark or index in self._acked:
+            return
+        pos = bisect_right(self._outstanding, index)
+        if pos and self._outstanding[pos - 1] == index:
+            return  # redelivery of an in-flight record
+        insort(self._outstanding, index)
+
+    def _drain(self) -> int:
+        while self._outstanding and self._outstanding[0] in self._acked:
+            self._acked.discard(self._outstanding[0])
+            self._watermark = max(self._watermark, self._outstanding.pop(0))
+        return self._watermark
+
+    def ack(self, index: int) -> int:
+        """Acknowledge one delivered index; returns the watermark."""
+        if index > self._watermark:
+            self._acked.add(index)
+        return self._drain()
+
+    def ack_through(self, index: int) -> int:
+        """Cumulative acknowledgement of every delivered index <= index."""
+        pos = bisect_right(self._outstanding, index)
+        head, self._outstanding = self._outstanding[:pos], self._outstanding[pos:]
+        for idx in head:
+            self._acked.discard(idx)
+            self._watermark = max(self._watermark, idx)
+        return self._drain()

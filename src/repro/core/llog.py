@@ -1,0 +1,195 @@
+"""Per-producer persistent changelog journal (paper §II, Lustre LLOG).
+
+One ``Llog`` per producer (an MDT in Lustre; a host/runtime-shard in the
+training framework).  Semantics follow the paper:
+
+- Logging is armed as soon as at least one reader is registered.
+- The administrator selects which operation types are logged (``mask``).
+- Records receive a monotonically increasing ``cr_index`` and a
+  ``cr_prev`` pointing at the previous record touching the same target.
+- Records are kept (on disk when a path is given) *until read and
+  acknowledged by all registered readers*; the trim point is the minimum
+  acknowledged index across readers.
+- Readers poll with an explicit start index (the paper calls out that the
+  start command addresses a changelog index on a given MDT, not a reader
+  ID — we reproduce that, and LCAP papers over it).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+import threading
+from typing import Dict, Iterable, List, Optional
+
+from . import records as R
+
+_LEN = struct.Struct("<I")
+
+
+class Llog:
+    def __init__(self, producer_id: str, path: Optional[str] = None,
+                 mask: Optional[Iterable[int]] = None):
+        self.producer_id = producer_id
+        self.path = path
+        self.mask = set(mask) if mask is not None else None  # None = all
+        self._recs: List[bytes] = []      # packed records
+        self._first = 1                   # index of _recs[0]
+        self._next = 1
+        self._prev_by_key: Dict[tuple, int] = {}
+        self._readers: Dict[str, int] = {}   # reader_id -> acked-through index
+        self._reader_seq = 0
+        self._lock = threading.Lock()
+        self._fh = None
+        if path:
+            self._load()
+
+    # -- persistence --------------------------------------------------------
+    def _sidecar(self) -> str:
+        return self.path + ".readers"
+
+    def _load(self) -> None:
+        if os.path.exists(self.path):
+            with open(self.path, "rb") as fh:
+                data = fh.read()
+            off = 0
+            while off + 4 <= len(data):
+                (ln,) = _LEN.unpack_from(data, off)
+                buf = data[off + 4:off + 4 + ln]
+                off += 4 + ln
+                self._recs.append(buf)
+            if self._recs:
+                self._first = R.unpack(self._recs[0]).index
+                self._next = R.unpack(self._recs[-1]).index + 1
+        if os.path.exists(self._sidecar()):
+            with open(self._sidecar()) as fh:
+                meta = json.load(fh)
+            self._readers = {k: int(v) for k, v in meta["readers"].items()}
+            self._reader_seq = meta.get("seq", len(self._readers))
+            self._first = meta.get("first", self._first)
+            self._next = max(self._next, meta.get("next", self._next))
+
+    def _persist_meta(self) -> None:
+        if not self.path:
+            return
+        tmp = self._sidecar() + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump({"readers": self._readers, "seq": self._reader_seq,
+                       "first": self._first, "next": self._next}, fh)
+        os.replace(tmp, self._sidecar())
+
+    def _append_disk(self, buf: bytes) -> None:
+        if not self.path:
+            return
+        if self._fh is None:
+            self._fh = open(self.path, "ab")
+        self._fh.write(_LEN.pack(len(buf)) + buf)
+        self._fh.flush()
+
+    # -- reader registry -----------------------------------------------------
+    @property
+    def enabled(self) -> bool:
+        return bool(self._readers)
+
+    def register_reader(self, name: Optional[str] = None,
+                        resume: bool = False) -> str:
+        """Register (or, with ``resume``, re-attach to) a reader.
+        Registrations are persistent — a restarted reader resumes at its
+        acknowledged position and replays everything unacknowledged
+        (at-least-once across restarts)."""
+        with self._lock:
+            self._reader_seq += 1
+            rid = name or f"cl{self._reader_seq}"
+            if rid in self._readers:
+                if resume:
+                    return rid
+                raise ValueError(f"reader {rid} already registered")
+            # a new reader only owes acks for records logged from now on
+            self._readers[rid] = self._next - 1
+            self._persist_meta()
+            return rid
+
+    def deregister_reader(self, rid: str) -> None:
+        with self._lock:
+            self._readers.pop(rid, None)
+            self._trim_locked()
+            self._persist_meta()
+
+    # -- producing -----------------------------------------------------------
+    def log(self, rec: R.ChangelogRecord) -> Optional[int]:
+        """Append a record; returns its index, or None when not logged
+        (no registered reader, or type masked out)."""
+        with self._lock:
+            if not self._readers:
+                return None
+            if self.mask is not None and rec.type not in self.mask:
+                return None
+            rec.index = self._next
+            rec.prev = self._prev_by_key.get(rec.key(), 0)
+            self._prev_by_key[rec.key()] = rec.index
+            if not rec.time:
+                rec.time = R.now_ns()
+            buf = R.pack(rec)
+            self._recs.append(buf)
+            self._next += 1
+            self._append_disk(buf)
+            return rec.index
+
+    # -- consuming -----------------------------------------------------------
+    @property
+    def first_index(self) -> int:
+        return self._first
+
+    @property
+    def last_index(self) -> int:
+        return self._next - 1
+
+    def read(self, start: int, max_records: int = 1024) -> List[bytes]:
+        """Return packed records with index >= start (at most
+        ``max_records``).  ``start`` is a changelog index, per the paper."""
+        with self._lock:
+            if start < self._first:
+                start = self._first
+            lo = start - self._first
+            if lo < 0 or lo >= len(self._recs):
+                return []
+            return self._recs[lo:lo + max_records]
+
+    def ack(self, rid: str, index: int) -> None:
+        """Acknowledge (clear) records up to ``index`` for reader ``rid``;
+        trims storage up to the minimum acked index across readers."""
+        with self._lock:
+            if rid not in self._readers:
+                raise KeyError(f"unknown reader {rid}")
+            if index > self._readers[rid]:
+                self._readers[rid] = index
+            self._trim_locked()
+            self._persist_meta()
+
+    def _trim_locked(self) -> None:
+        if not self._readers:
+            return
+        horizon = min(self._readers.values())
+        drop = horizon - self._first + 1
+        if drop > 0:
+            drop = min(drop, len(self._recs))
+            self._recs = self._recs[drop:]
+            self._first += drop
+            if self.path:
+                self._rewrite_disk()
+
+    def _rewrite_disk(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+        tmp = self.path + ".tmp"
+        with open(tmp, "wb") as fh:
+            for buf in self._recs:
+                fh.write(_LEN.pack(len(buf)) + buf)
+        os.replace(tmp, self.path)
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None

@@ -1,0 +1,87 @@
+"""Stream pre-processing modules (paper §III-A).
+
+The paper's proxy loads shared-library modules that pre-process the
+record stream before redistribution — e.g. "records can be dropped for
+operations that compensate each other (creat/unlink) or re-ordered to
+optimize downchain processing".  Same contract here: a module is a
+callable ``batch -> batch`` over parsed records, composed in order.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, Iterable, List, Set
+
+from . import records as R
+
+Batch = List[R.ChangelogRecord]
+
+
+class CancelCompensating:
+    """Drop (CREAT, UNLNK) pairs on the same target within a batch —
+    the paper's canonical example.  Extended with the training-event
+    analogue: a CKPT_WRITE superseded by a newer CKPT_WRITE of the same
+    shard within the batch (only the latest write matters to the
+    committer, exactly like creat/unlink compensating each other)."""
+
+    CANCEL = {(R.CL_CREATE, R.CL_UNLINK), (R.CL_MKDIR, R.CL_RMDIR)}
+
+    def __init__(self, supersede_ckpt: bool = True):
+        self.supersede_ckpt = supersede_ckpt
+
+    def __call__(self, batch: Batch) -> Batch:
+        drop: Set[int] = set()
+        open_by_key: Dict[tuple, List[int]] = defaultdict(list)
+        for i, rec in enumerate(batch):
+            k = rec.key()
+            for create_t, destroy_t in self.CANCEL:
+                if rec.type == create_t:
+                    open_by_key[(k, create_t)].append(i)
+                elif rec.type == destroy_t and open_by_key.get((k, create_t)):
+                    j = open_by_key[(k, create_t)].pop()
+                    drop.add(i)
+                    drop.add(j)
+        if self.supersede_ckpt:
+            last: Dict[tuple, int] = {}
+            for i, rec in enumerate(batch):
+                if rec.type == R.CL_CKPT_WRITE:
+                    k = (rec.tfid.seq, rec.tfid.oid)   # shard identity
+                    if k in last:
+                        drop.add(last[k])
+                    last[k] = i
+        return [r for i, r in enumerate(batch) if i not in drop]
+
+
+class ReorderByTarget:
+    """Stable-sort a batch by target fid then index, so a downstream
+    consumer touching per-object state (robinhood's DB rows) gets runs of
+    records on the same object — 'reordered to optimize downchain
+    processing'."""
+
+    def __call__(self, batch: Batch) -> Batch:
+        return sorted(batch, key=lambda r: (r.tfid.seq, r.tfid.oid,
+                                            r.tfid.ver, r.index))
+
+
+class TypeFilter:
+    """Keep only the requested operation types (the administrator 'can
+    select which operations to log' — the proxy can narrow further)."""
+
+    def __init__(self, keep: Iterable[int]):
+        self.keep = set(keep)
+
+    def __call__(self, batch: Batch) -> Batch:
+        return [r for r in batch if r.type in self.keep]
+
+
+class CoalesceHeartbeats:
+    """Keep only the newest heartbeat per host within a batch (liveness
+    is level-triggered; history adds nothing downstream)."""
+
+    def __call__(self, batch: Batch) -> Batch:
+        last: Dict[int, int] = {}
+        for i, rec in enumerate(batch):
+            if rec.type == R.CL_HEARTBEAT:
+                last[rec.tfid.oid] = i
+        return [r for i, r in enumerate(batch)
+                if r.type != R.CL_HEARTBEAT or last[r.tfid.oid] == i]

@@ -1,0 +1,280 @@
+"""LCAP proxy — Lustre Changelog Aggregate and Publish (paper §III).
+
+Broker between N producers (each exposing an ``Llog``) and M consumers:
+
+- **greedy batched reads**: each ``pump()`` drains every producer's
+  journal into an in-memory buffer (bounded; persistence stays upstream,
+  which is what makes at-least-once acceptable — paper §III-A);
+- **stream modules** pre-process batches at ingest (drop compensating
+  pairs, reorder, filter — paper: shared-library modules);
+- **consumer groups**: every record is delivered to *each* group and to
+  exactly *one member* within a group (least-loaded dispatch →
+  load-balanced processing);
+- **ephemeral readers** receive only records ingested after they
+  subscribed and never acknowledge (paper §IV-B);
+- **collective acknowledgement**: a record is acknowledged upstream to
+  the producer's journal only once every group has acknowledged it;
+- **at-least-once**: when a consumer dies, its in-flight records are
+  redelivered to surviving group members.
+
+The core is synchronous (``pump()``) for determinism; ``LcapService``
+(server.py) wraps it with a polling thread + TCP transport.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+from . import records as R
+from .ack import AckTracker
+from .llog import Llog
+
+RecordBatch = List[R.ChangelogRecord]
+Module = Callable[[RecordBatch], RecordBatch]
+
+PERSISTENT = "persistent"
+EPHEMERAL = "ephemeral"
+
+
+class Consumer:
+    def __init__(self, cid: str, group: Optional[str], flags: int, mode: str):
+        self.cid = cid
+        self.group = group
+        self.flags = flags & R.CLF_SUPPORTED
+        self.mode = mode
+        self.outbox: Deque[Tuple[str, int, bytes]] = deque()
+        # (producer, index) -> packed record, for redelivery
+        self.in_flight: Dict[Tuple[str, int], bytes] = {}
+        self.alive = True
+        self.delivered = 0
+
+    @property
+    def load(self) -> int:
+        return len(self.outbox) + len(self.in_flight)
+
+
+class Group:
+    def __init__(self, name: str):
+        self.name = name
+        self.members: Dict[str, Consumer] = {}
+        self.trackers: Dict[str, AckTracker] = {}
+        self.pending: Deque[Tuple[str, int, bytes]] = deque()  # no member yet
+
+    def tracker(self, pid: str) -> AckTracker:
+        if pid not in self.trackers:
+            self.trackers[pid] = AckTracker()
+        return self.trackers[pid]
+
+
+class LcapProxy:
+    def __init__(self, producers: Dict[str, Llog],
+                 modules: Optional[List[Module]] = None,
+                 batch_size: int = 1024, max_buffer: int = 1 << 20,
+                 outbox_cap: int = 1 << 16):
+        self.producers = dict(producers)
+        self.modules = list(modules or [])
+        self.batch_size = batch_size
+        self.max_buffer = max_buffer
+        self.outbox_cap = outbox_cap
+        self._lock = threading.RLock()
+        self._cid_seq = itertools.count(1)
+        # register as a regular changelog reader with every producer (§III)
+        self.reader_ids: Dict[str, str] = {
+            pid: log.register_reader(f"lcap-{pid}", resume=True)
+            for pid, log in self.producers.items()}
+        self.cursors: Dict[str, int] = {
+            pid: log.first_index for pid, log in self.producers.items()}
+        self.ingested: Dict[str, int] = {
+            pid: log.first_index - 1 for pid, log in self.producers.items()}
+        self.upstream_acked: Dict[str, int] = dict(self.ingested)
+        self.groups: Dict[str, Group] = {}
+        self.consumers: Dict[str, Consumer] = {}
+        self._buffer: Deque[Tuple[str, bytes]] = deque()  # ingest → dispatch
+        self.stats = {"ingested": 0, "dispatched": 0, "dropped_by_modules": 0,
+                      "redelivered": 0, "acked_upstream": 0,
+                      "ephemeral_drops": 0}
+
+    # ------------------------------------------------------------------ API
+    def add_producer(self, pid: str, log: Llog) -> None:
+        with self._lock:
+            self.producers[pid] = log
+            self.reader_ids[pid] = log.register_reader(f"lcap-{pid}",
+                                                       resume=True)
+            self.cursors[pid] = log.first_index
+            self.ingested[pid] = log.first_index - 1
+            self.upstream_acked[pid] = self.ingested[pid]
+
+    def subscribe(self, group: Optional[str], flags: int = R.CLF_SUPPORTED,
+                  mode: str = PERSISTENT, cid: Optional[str] = None) -> str:
+        """Register a consumer.  Persistent consumers name a group and
+        share its stream; ephemeral consumers pass ``mode=EPHEMERAL``
+        (group may be None) and only see records ingested afterwards."""
+        with self._lock:
+            cid = cid or f"c{next(self._cid_seq)}"
+            if cid in self.consumers:
+                raise ValueError(f"consumer {cid} exists")
+            if mode == PERSISTENT:
+                if not group:
+                    raise ValueError("persistent consumers need a group")
+                cons = Consumer(cid, group, flags, mode)
+                grp = self.groups.setdefault(group, Group(group))
+                grp.members[cid] = cons
+                # drain records parked while the group had no members
+                while grp.pending:
+                    pid, idx, buf = grp.pending.popleft()
+                    self._hand_to(cons, pid, idx, buf)
+            elif mode == EPHEMERAL:
+                cons = Consumer(cid, None, flags, mode)
+                # connection point: nothing ingested before now (§IV-B)
+                cons.since = dict(self.ingested)  # type: ignore[attr-defined]
+            else:
+                raise ValueError(f"unknown mode {mode}")
+            self.consumers[cid] = cons
+            return cid
+
+    def unsubscribe(self, cid: str, failed: bool = False) -> None:
+        """Remove a consumer.  Its undelivered/unacked records go back to
+        the group (at-least-once)."""
+        with self._lock:
+            cons = self.consumers.pop(cid, None)
+            if cons is None:
+                return
+            cons.alive = False
+            if cons.mode == EPHEMERAL:
+                return
+            grp = self.groups[cons.group]
+            del grp.members[cid]
+            # in_flight covers everything undelivered OR unacked (records
+            # are tracked there from dispatch until ack), so it alone is
+            # the redelivery backlog — using outbox too would duplicate
+            # queued-but-unfetched records.
+            backlog = sorted(
+                (pid, idx, buf) for (pid, idx), buf in cons.in_flight.items())
+            self.stats["redelivered"] += len(backlog)
+            for pid, idx, buf in backlog:
+                self._dispatch_to_group(grp, pid, idx, buf)
+
+    fail = lambda self, cid: self.unsubscribe(cid, failed=True)  # noqa: E731
+
+    # ------------------------------------------------------------- ingest
+    def _ingest(self) -> int:
+        n = 0
+        for pid, log in self.producers.items():
+            rid = self.reader_ids[pid]
+            while len(self._buffer) < self.max_buffer:
+                batch = log.read(self.cursors[pid], self.batch_size)
+                if not batch:
+                    break
+                recs = [R.unpack(b) for b in batch]
+                hi = max(r.index for r in recs)
+                self.cursors[pid] = hi + 1
+                kept = recs
+                for mod in self.modules:
+                    kept = mod(kept)
+                self.stats["dropped_by_modules"] += len(recs) - len(kept)
+                for rec in kept:
+                    self._buffer.append((pid, R.pack(rec)))
+                self.ingested[pid] = hi
+                n += len(recs)
+                if len(batch) < self.batch_size:
+                    break
+        self.stats["ingested"] += n
+        return n
+
+    # ----------------------------------------------------------- dispatch
+    def _hand_to(self, cons: Consumer, pid: str, idx: int, buf: bytes) -> None:
+        # remote remap: strip fields the consumer did not ask for (§IV-A)
+        out = R.remap(buf, R.packed_flags(buf) & cons.flags)
+        cons.outbox.append((pid, idx, out))
+        cons.in_flight[(pid, idx)] = buf
+        cons.delivered += 1
+        self.stats["dispatched"] += 1
+
+    def _dispatch_to_group(self, grp: Group, pid: str, idx: int,
+                           buf: bytes) -> None:
+        grp.tracker(pid).deliver(idx)
+        live = [m for m in grp.members.values() if m.alive]
+        if not live:
+            grp.pending.append((pid, idx, buf))
+            return
+        cons = min(live, key=lambda m: m.load)   # least-loaded (§III-A)
+        self._hand_to(cons, pid, idx, buf)
+
+    def _dispatch(self) -> int:
+        n = 0
+        while self._buffer:
+            # backpressure: stop when any persistent consumer is saturated
+            if any(len(c.outbox) >= self.outbox_cap
+                   for c in self.consumers.values()
+                   if c.mode == PERSISTENT and c.alive):
+                break
+            pid, buf = self._buffer.popleft()
+            idx = R.unpack(buf).index
+            for grp in self.groups.values():
+                self._dispatch_to_group(grp, pid, idx, buf)
+            for cons in self.consumers.values():
+                if cons.mode != EPHEMERAL or not cons.alive:
+                    continue
+                if idx <= cons.since.get(pid, -1):  # type: ignore
+                    continue  # emitted before connection (§IV-B)
+                if len(cons.outbox) >= self.outbox_cap:
+                    self.stats["ephemeral_drops"] += 1   # radio semantics
+                    continue
+                out = R.remap(buf, R.packed_flags(buf) & cons.flags)
+                cons.outbox.append((pid, idx, out))
+            n += 1
+        return n
+
+    def pump(self) -> int:
+        """One synchronous ingest+dispatch cycle; returns records moved."""
+        with self._lock:
+            a = self._ingest()
+            b = self._dispatch()
+            return a + b
+
+    # -------------------------------------------------------------- fetch
+    def fetch(self, cid: str, max_records: int = 256) -> List[Tuple[str, int, bytes]]:
+        with self._lock:
+            cons = self.consumers[cid]
+            out = []
+            while cons.outbox and len(out) < max_records:
+                out.append(cons.outbox.popleft())
+            return out
+
+    # ---------------------------------------------------------------- ack
+    def ack(self, cid: str, pid: str, index: int) -> None:
+        with self._lock:
+            cons = self.consumers[cid]
+            if cons.mode == EPHEMERAL:
+                return  # ephemeral readers are not expected to ack (§IV-B)
+            cons.in_flight.pop((pid, index), None)
+            grp = self.groups[cons.group]
+            grp.tracker(pid).ack(index)
+            self._ack_upstream(pid)
+
+    def _group_position(self, grp: Group, pid: str) -> int:
+        tr = grp.tracker(pid)
+        if tr.in_flight or grp.pending:
+            return tr.watermark
+        # nothing outstanding: the group is current through everything
+        # ingested (records dropped by modules must not block the trim)
+        return max(tr.watermark, self.ingested.get(pid, 0))
+
+    def _ack_upstream(self, pid: str) -> None:
+        if not self.groups:
+            return
+        horizon = min(self._group_position(g, pid) for g in self.groups.values())
+        if horizon > self.upstream_acked.get(pid, 0):
+            self.producers[pid].ack(self.reader_ids[pid], horizon)
+            self.upstream_acked[pid] = horizon
+            self.stats["acked_upstream"] += 1
+
+    def flush_upstream(self) -> None:
+        """Propagate collective acks for producers with no outstanding
+        records (e.g. after module-dropped batches)."""
+        with self._lock:
+            for pid in self.producers:
+                self._ack_upstream(pid)

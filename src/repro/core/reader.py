@@ -1,0 +1,92 @@
+"""Changelog consumer client API (paper §II's four-phase loop).
+
+    1) start (register with a group / as ephemeral, express flags)
+    2) receive/consume records
+    3) acknowledge (may be delayed and batched)
+    4) stop (deregister)
+
+Two bindings share one interface:
+- ``LocalReader`` talks to an in-process ``LcapProxy``;
+- ``RemoteReader`` talks to an ``LcapService`` over TCP (server.py).
+
+The client performs the *local* half of record remapping: fields the
+consumer requested but the record (as stripped by the proxy) does not
+carry are zero-filled locally (§IV-A).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from . import records as R
+from .proxy import EPHEMERAL, PERSISTENT, LcapProxy
+from .transport import RpcClient
+
+
+class _Base:
+    flags: int
+
+    def _remap_local(self, buf: bytes) -> R.ChangelogRecord:
+        # local remap: add (zero-fill) missing requested fields
+        return R.unpack(R.remap(buf, self.flags))
+
+
+class LocalReader(_Base):
+    def __init__(self, proxy: LcapProxy, group: Optional[str],
+                 flags: int = R.CLF_SUPPORTED, mode: str = PERSISTENT):
+        self.proxy = proxy
+        self.flags = flags & R.CLF_SUPPORTED
+        self.cid = proxy.subscribe(group, flags, mode)
+        self.mode = mode
+
+    def fetch(self, max_records: int = 256) -> List[Tuple[str, R.ChangelogRecord]]:
+        out = []
+        for pid, idx, buf in self.proxy.fetch(self.cid, max_records):
+            rec = self._remap_local(buf)
+            rec.index = idx
+            out.append((pid, rec))
+        return out
+
+    def ack(self, pid: str, index: int) -> None:
+        self.proxy.ack(self.cid, pid, index)
+
+    def close(self, failed: bool = False) -> None:
+        self.proxy.unsubscribe(self.cid, failed=failed)
+
+
+class RemoteReader(_Base):
+    def __init__(self, address, group: Optional[str],
+                 flags: int = R.CLF_SUPPORTED, mode: str = PERSISTENT):
+        self.rpc = RpcClient(address)
+        self.flags = flags & R.CLF_SUPPORTED
+        reply = self.rpc.call({"op": "register", "group": group,
+                               "flags": self.flags, "mode": mode})
+        if reply.get("err"):
+            raise RuntimeError(reply["err"])
+        self.cid = reply["cid"]
+        self.mode = mode
+
+    def fetch(self, max_records: int = 256) -> List[Tuple[str, R.ChangelogRecord]]:
+        reply = self.rpc.call({"op": "fetch", "cid": self.cid,
+                               "max": max_records})
+        out = []
+        for pid, idx, buf in reply["recs"]:
+            rec = self._remap_local(buf)
+            rec.index = idx
+            out.append((pid, rec))
+        return out
+
+    def ack(self, pid: str, index: int) -> None:
+        self.rpc.call({"op": "ack", "cid": self.cid, "pid": pid,
+                       "index": index})
+
+    def close(self, failed: bool = False) -> None:
+        if failed:
+            # simulate a crash: drop the socket without deregistering;
+            # the service's disconnect hook triggers redelivery
+            self.rpc.close()
+            return
+        try:
+            self.rpc.call({"op": "close", "cid": self.cid})
+        finally:
+            self.rpc.close()

@@ -1,0 +1,340 @@
+"""Extensible changelog record format (paper §IV-A, LU-1996).
+
+Faithful reimplementation of the Lustre 2.7 ``struct changelog_rec`` layout:
+
+    fixed header (64 B):
+        cr_namelen  u16     length of trailing name (bytes, no NUL)
+        cr_flags    u16     extension mask (CLF_*) | high bits reserved
+        cr_type     u16     operation code (CL_*)
+        <2 B pad>
+        cr_index    u64     record index within its producer's llog
+        cr_prev     u64     index of the previous record touching cr_tfid
+        cr_time     u64     nanoseconds since epoch
+        cr_tfid     fid     target object (seq u64, oid u32, ver u32)
+        cr_pfid     fid     parent object
+    optional, flag-gated, in canonical order:
+        CLF_RENAME  -> cr_sfid (16 B) + cr_spfid (16 B)
+        CLF_JOBID   -> cr_jobid (32 B, NUL padded)
+        CLF_SHARD   -> pod u16, host u16, mesh_row u16, mesh_col u16
+        CLF_METRICS -> count u16 + count * f64
+        CLF_XATTR   -> len u32 + msgpack blob
+    variable tail:
+        name  (cr_namelen B)
+        CLF_RENAME -> NUL + sname (to end of record)
+
+Field access is by *inline offset computation from the flags mask*
+(``_offset_after``), exactly as the paper describes — a record never
+stores empty space for fields it does not carry.
+
+``remap()`` converts a packed record between flag sets: adding fields
+fills them with zeros (the "recent client, older server" direction, done
+*locally* at the client); removing fields strips them (the "older client,
+newer server" direction, done *remotely* at the proxy to save
+bandwidth).  Both directions preserve every field present in both masks.
+"""
+
+from __future__ import annotations
+
+import struct
+import time as _time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import msgpack
+
+# ---------------------------------------------------------------------------
+# Operation types.  CL_* codes 0..13 mirror Lustre; >=32 are the training
+# event extensions this framework layers on top (same record machinery).
+# ---------------------------------------------------------------------------
+CL_MARK = 0
+CL_CREATE = 1
+CL_MKDIR = 2
+CL_HARDLINK = 3
+CL_SOFTLINK = 4
+CL_MKNOD = 5
+CL_UNLINK = 6
+CL_RMDIR = 7
+CL_RENAME = 8
+CL_EXT = 9          # rename target (legacy two-record form, pre LU-1331)
+CL_OPEN = 10
+CL_CLOSE = 11
+CL_SETATTR = 13
+
+# Training-event extension types (the framework's "metadata operations").
+CL_STEP_COMMIT = 32      # a training step committed on a host
+CL_CKPT_WRITE = 33       # one checkpoint shard persisted
+CL_CKPT_COMMIT = 34      # full checkpoint committed (all shards seen)
+CL_DATA_CONSUME = 35     # a data shard/batch range consumed
+CL_HEARTBEAT = 36        # liveness + step-duration sample
+CL_ELASTIC_JOIN = 37     # host/pod joined the mesh
+CL_ELASTIC_LEAVE = 38    # host/pod left (failure or scale-down)
+CL_STRAGGLER = 39        # straggler verdict for a host
+CL_EVICT = 40            # cache invalidation notice (Ganesha analogue)
+
+CL_LAST = 41
+
+TYPE_NAMES = {
+    CL_MARK: "MARK", CL_CREATE: "CREAT", CL_MKDIR: "MKDIR",
+    CL_HARDLINK: "HLINK", CL_SOFTLINK: "SLINK", CL_MKNOD: "MKNOD",
+    CL_UNLINK: "UNLNK", CL_RMDIR: "RMDIR", CL_RENAME: "RENME",
+    CL_EXT: "EXT", CL_OPEN: "OPEN", CL_CLOSE: "CLOSE", CL_SETATTR: "SATTR",
+    CL_STEP_COMMIT: "STEP", CL_CKPT_WRITE: "CKPTW", CL_CKPT_COMMIT: "CKPTC",
+    CL_DATA_CONSUME: "DATA", CL_HEARTBEAT: "HBEAT", CL_ELASTIC_JOIN: "EJOIN",
+    CL_ELASTIC_LEAVE: "ELEAV", CL_STRAGGLER: "STRAG", CL_EVICT: "EVICT",
+}
+
+# ---------------------------------------------------------------------------
+# Extension flags (canonical order == wire order).
+# ---------------------------------------------------------------------------
+CLF_RENAME = 0x0001
+CLF_JOBID = 0x0002
+CLF_SHARD = 0x0004
+CLF_METRICS = 0x0008
+CLF_XATTR = 0x0010
+
+CLF_SUPPORTED = CLF_RENAME | CLF_JOBID | CLF_SHARD | CLF_METRICS | CLF_XATTR
+# Flag masks of the historical formats (fig. 3)
+CLF_V20 = 0x0000                 # struct changelog_rec (v2.0)
+CLF_EXT_REC = CLF_RENAME         # struct changelog_ext_rec
+CLF_V27 = CLF_RENAME | CLF_JOBID  # struct changelog_rec (v2.7)
+
+_HDR = struct.Struct("<HHHxxQQQ")          # namelen, flags, type, index, prev, time
+_FID = struct.Struct("<QII")               # seq, oid, ver
+HDR_SIZE = _HDR.size + 2 * _FID.size       # 64
+assert HDR_SIZE == 64
+
+_JOBID_LEN = 32
+_SHARD = struct.Struct("<HHHH")
+
+
+@dataclass(frozen=True)
+class Fid:
+    """Object identifier: (sequence, object id, version).
+
+    In the framework: seq = run id, oid = object id (host, shard, tensor,
+    batch-range...), ver = version/step.
+    """
+    seq: int = 0
+    oid: int = 0
+    ver: int = 0
+
+    def pack(self) -> bytes:
+        return _FID.pack(self.seq, self.oid, self.ver)
+
+    @staticmethod
+    def unpack(buf: bytes, off: int = 0) -> "Fid":
+        return Fid(*_FID.unpack_from(buf, off))
+
+
+NULL_FID = Fid()
+
+
+@dataclass
+class ChangelogRecord:
+    type: int = CL_MARK
+    index: int = 0
+    prev: int = 0
+    time: int = 0
+    tfid: Fid = NULL_FID
+    pfid: Fid = NULL_FID
+    name: bytes = b""
+    # flag-gated extensions
+    sfid: Optional[Fid] = None           # CLF_RENAME
+    spfid: Optional[Fid] = None
+    sname: bytes = b""                   # rename source name (tail)
+    jobid: Optional[bytes] = None        # CLF_JOBID (<=32 B)
+    shard: Optional[Tuple[int, int, int, int]] = None  # CLF_SHARD
+    metrics: Optional[Tuple[float, ...]] = None        # CLF_METRICS
+    xattr: Optional[Dict[str, Any]] = None             # CLF_XATTR
+
+    @property
+    def flags(self) -> int:
+        f = 0
+        if self.sfid is not None:
+            f |= CLF_RENAME
+        if self.jobid is not None:
+            f |= CLF_JOBID
+        if self.shard is not None:
+            f |= CLF_SHARD
+        if self.metrics is not None:
+            f |= CLF_METRICS
+        if self.xattr is not None:
+            f |= CLF_XATTR
+        return f
+
+    @property
+    def type_name(self) -> str:
+        return TYPE_NAMES.get(self.type, f"?{self.type}")
+
+    def key(self) -> Tuple[int, int, int]:
+        """Identity of the target object (used by compaction modules)."""
+        return (self.tfid.seq, self.tfid.oid, self.tfid.ver)
+
+    def __str__(self) -> str:  # lfs changelog-like rendering
+        return (f"{self.index} {self.type:02d}{self.type_name} "
+                f"t=[{self.tfid.seq:#x}:{self.tfid.oid:#x}:{self.tfid.ver:#x}] "
+                f"p=[{self.pfid.seq:#x}:{self.pfid.oid:#x}:{self.pfid.ver:#x}] "
+                f"{self.name.decode(errors='replace')}")
+
+
+def now_ns() -> int:
+    return _time.time_ns()
+
+
+# ---------------------------------------------------------------------------
+# Offset computation (the LU-1996 inline functions).
+# ---------------------------------------------------------------------------
+def _ext_sizes(flags: int, buf: Optional[bytes] = None, base: int = 0):
+    """Yield (flag, size) for each extension present in ``flags``.
+
+    CLF_METRICS / CLF_XATTR are variable: when ``buf`` is given, sizes are
+    read from the wire; otherwise they cannot be computed (callers that
+    only add/strip fixed fields never need them without a buffer).
+    """
+    off = base
+    if flags & CLF_RENAME:
+        yield CLF_RENAME, 2 * _FID.size
+        off += 2 * _FID.size
+    if flags & CLF_JOBID:
+        yield CLF_JOBID, _JOBID_LEN
+        off += _JOBID_LEN
+    if flags & CLF_SHARD:
+        yield CLF_SHARD, _SHARD.size
+        off += _SHARD.size
+    if flags & CLF_METRICS:
+        if buf is None:
+            raise ValueError("CLF_METRICS size needs the buffer")
+        (cnt,) = struct.unpack_from("<H", buf, off)
+        sz = 2 + 8 * cnt
+        yield CLF_METRICS, sz
+        off += sz
+    if flags & CLF_XATTR:
+        if buf is None:
+            raise ValueError("CLF_XATTR size needs the buffer")
+        (ln,) = struct.unpack_from("<I", buf, off)
+        yield CLF_XATTR, 4 + ln
+
+
+def rec_offset(flags: int, upto: int, buf: Optional[bytes] = None) -> int:
+    """Offset of extension ``upto`` (or of the name tail if upto==0)
+    within a record carrying ``flags`` — the paper's inline offset
+    computation."""
+    off = HDR_SIZE
+    for flag, size in _ext_sizes(flags, buf, HDR_SIZE):
+        if flag == upto:
+            return off
+        off += size
+    if upto:
+        raise KeyError(f"flag {upto:#x} not in mask {flags:#x}")
+    return off
+
+
+def pack(rec: ChangelogRecord) -> bytes:
+    """Serialize to the wire format described in the module docstring."""
+    flags = rec.flags
+    parts = [
+        _HDR.pack(len(rec.name), flags, rec.type, rec.index, rec.prev,
+                  rec.time),
+        rec.tfid.pack(), rec.pfid.pack(),
+    ]
+    if flags & CLF_RENAME:
+        parts.append(rec.sfid.pack())
+        parts.append((rec.spfid or NULL_FID).pack())
+    if flags & CLF_JOBID:
+        jb = (rec.jobid or b"")[:_JOBID_LEN]
+        parts.append(jb.ljust(_JOBID_LEN, b"\0"))
+    if flags & CLF_SHARD:
+        parts.append(_SHARD.pack(*rec.shard))
+    if flags & CLF_METRICS:
+        vals = rec.metrics or ()
+        parts.append(struct.pack(f"<H{len(vals)}d", len(vals), *vals))
+    if flags & CLF_XATTR:
+        blob = msgpack.packb(rec.xattr or {})
+        parts.append(struct.pack("<I", len(blob)) + blob)
+    parts.append(rec.name)
+    if flags & CLF_RENAME:
+        parts.append(b"\0" + rec.sname)
+    return b"".join(parts)
+
+
+def unpack(buf: bytes) -> ChangelogRecord:
+    namelen, flags, rtype, index, prev, tns = _HDR.unpack_from(buf, 0)
+    tfid = Fid.unpack(buf, _HDR.size)
+    pfid = Fid.unpack(buf, _HDR.size + _FID.size)
+    rec = ChangelogRecord(type=rtype, index=index, prev=prev, time=tns,
+                          tfid=tfid, pfid=pfid)
+    off = HDR_SIZE
+    if flags & CLF_RENAME:
+        rec.sfid = Fid.unpack(buf, off)
+        rec.spfid = Fid.unpack(buf, off + _FID.size)
+        off += 2 * _FID.size
+    if flags & CLF_JOBID:
+        rec.jobid = buf[off:off + _JOBID_LEN].rstrip(b"\0")
+        off += _JOBID_LEN
+    if flags & CLF_SHARD:
+        rec.shard = _SHARD.unpack_from(buf, off)
+        off += _SHARD.size
+    if flags & CLF_METRICS:
+        (cnt,) = struct.unpack_from("<H", buf, off)
+        rec.metrics = struct.unpack_from(f"<{cnt}d", buf, off + 2)
+        off += 2 + 8 * cnt
+    if flags & CLF_XATTR:
+        (ln,) = struct.unpack_from("<I", buf, off)
+        rec.xattr = msgpack.unpackb(buf[off + 4:off + 4 + ln])
+        off += 4 + ln
+    rec.name = buf[off:off + namelen]
+    off += namelen
+    if flags & CLF_RENAME and off < len(buf):
+        rec.sname = buf[off + 1:]  # skip NUL separator
+    return rec
+
+
+def packed_flags(buf: bytes) -> int:
+    return struct.unpack_from("<H", buf, 2)[0]
+
+
+def remap(buf: bytes, target_flags: int) -> bytes:
+    """Remap a *packed* record to ``target_flags`` (paper §IV-A).
+
+    Fields present in both masks are copied; fields only in the target are
+    zero-filled (local remap at a newer client); fields only in the source
+    are stripped (remote remap at the proxy for an older client).  Works
+    directly on the byte representation using offset arithmetic — no
+    oversized intermediate with empty fields is ever stored.
+    """
+    target_flags &= CLF_SUPPORTED
+    src_flags = packed_flags(buf)
+    if src_flags == target_flags:
+        return buf
+    namelen = struct.unpack_from("<H", buf, 0)[0]
+
+    # slice source extensions
+    src_ext: Dict[int, bytes] = {}
+    off = HDR_SIZE
+    for flag, size in _ext_sizes(src_flags, buf, HDR_SIZE):
+        src_ext[flag] = buf[off:off + size]
+        off += size
+    name_and_tail = buf[off:]
+
+    head = bytearray(buf[:HDR_SIZE])
+    struct.pack_into("<H", head, 2, target_flags)
+    parts = [bytes(head)]
+    zero_default = {
+        CLF_RENAME: b"\0" * (2 * _FID.size),
+        CLF_JOBID: b"\0" * _JOBID_LEN,
+        CLF_SHARD: b"\0" * _SHARD.size,
+        CLF_METRICS: struct.pack("<H", 0),
+        CLF_XATTR: struct.pack("<I", 1) + msgpack.packb({}),
+    }
+    for flag in (CLF_RENAME, CLF_JOBID, CLF_SHARD, CLF_METRICS, CLF_XATTR):
+        if target_flags & flag:
+            parts.append(src_ext.get(flag, zero_default[flag]))
+    # tail: name, and sname only if the target still carries CLF_RENAME
+    if src_flags & CLF_RENAME and not target_flags & CLF_RENAME:
+        # strip the sname tail, keep only name
+        parts.append(name_and_tail[:namelen])
+    elif target_flags & CLF_RENAME and not src_flags & CLF_RENAME:
+        parts.append(name_and_tail[:namelen] + b"\0")
+    else:
+        parts.append(name_and_tail)
+    return b"".join(parts)

@@ -1,0 +1,77 @@
+"""LcapService — the proxy as a network daemon (paper fig. 1).
+
+Wraps ``LcapProxy`` with a greedy polling thread (reads records from the
+producers as soon as possible) and the TCP request/response service the
+``RemoteReader`` client speaks.  A consumer disconnect without ``close``
+is treated as a failure → its in-flight records are redelivered to the
+surviving members of its group (at-least-once, §III-A).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Optional
+
+from .proxy import LcapProxy
+from .transport import RpcServer
+
+
+class LcapService:
+    def __init__(self, proxy: LcapProxy, host: str = "127.0.0.1",
+                 port: int = 0, poll_interval: float = 0.002):
+        self.proxy = proxy
+        self.poll_interval = poll_interval
+        self._stop = threading.Event()
+        self.server = RpcServer(self._handle, self._disconnected, host, port)
+        self.address = self.server.address
+        self._poller = threading.Thread(target=self._poll_loop, daemon=True)
+
+    # ------------------------------------------------------------- service
+    def _handle(self, msg: Dict, session: Dict) -> Dict:
+        op = msg.get("op")
+        try:
+            if op == "register":
+                cid = self.proxy.subscribe(msg.get("group"),
+                                           msg.get("flags", 0xFFFF),
+                                           msg.get("mode", "persistent"))
+                session["cid"] = cid
+                return {"cid": cid}
+            if op == "fetch":
+                recs = self.proxy.fetch(msg["cid"], msg.get("max", 256))
+                return {"recs": [(pid, idx, buf) for pid, idx, buf in recs]}
+            if op == "ack":
+                self.proxy.ack(msg["cid"], msg["pid"], msg["index"])
+                return {"ok": True}
+            if op == "close":
+                session.pop("cid", None)
+                self.proxy.unsubscribe(msg["cid"])
+                return {"ok": True}
+            if op == "stats":
+                return {"stats": dict(self.proxy.stats)}
+            return {"err": f"unknown op {op!r}"}
+        except Exception as exc:  # noqa: BLE001 — reported to the peer
+            return {"err": f"{type(exc).__name__}: {exc}"}
+
+    def _disconnected(self, session: Dict) -> None:
+        cid = session.get("cid")
+        if cid:
+            self.proxy.unsubscribe(cid, failed=True)
+
+    # -------------------------------------------------------------- poller
+    def _poll_loop(self) -> None:
+        while not self._stop.is_set():
+            moved = self.proxy.pump()
+            self.proxy.flush_upstream()
+            if not moved:
+                time.sleep(self.poll_interval)
+
+    def start(self) -> "LcapService":
+        self.server.start()
+        self._poller.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._poller.join(timeout=5)
+        self.server.stop()

@@ -1,0 +1,113 @@
+"""Client/server transport (paper: ZeroMQ; here: in-proc + framed TCP).
+
+Message framing: u32 length prefix + msgpack payload.  The proxy exposes
+a request/response service (register / fetch / ack / close); consumers
+poll, exactly like Lustre changelog readers do.
+"""
+
+from __future__ import annotations
+
+import socket
+import socketserver
+import struct
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import msgpack
+
+_LEN = struct.Struct("<I")
+
+
+def send_msg(sock: socket.socket, msg: Dict[str, Any]) -> None:
+    blob = msgpack.packb(msg, use_bin_type=True)
+    sock.sendall(_LEN.pack(len(blob)) + blob)
+
+
+def recv_msg(sock: socket.socket) -> Optional[Dict[str, Any]]:
+    hdr = _recv_exact(sock, 4)
+    if hdr is None:
+        return None
+    (ln,) = _LEN.unpack(hdr)
+    blob = _recv_exact(sock, ln)
+    if blob is None:
+        return None
+    return msgpack.unpackb(blob, raw=False)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    chunks = []
+    while n:
+        try:
+            chunk = sock.recv(n)
+        except OSError:
+            return None
+        if not chunk:
+            return None
+        chunks.append(chunk)
+        n -= len(chunk)
+    return b"".join(chunks)
+
+
+class RpcServer:
+    """Threaded TCP server dispatching msgpack requests to a handler.
+
+    handler(msg, session) -> reply dict.  ``session`` is a per-connection
+    dict; ``on_disconnect(session)`` fires when the peer goes away (used
+    by the proxy to trigger at-least-once redelivery).
+    """
+
+    def __init__(self, handler: Callable[[Dict, Dict], Dict],
+                 on_disconnect: Optional[Callable[[Dict], None]] = None,
+                 host: str = "127.0.0.1", port: int = 0):
+        outer = self
+
+        class _Handler(socketserver.BaseRequestHandler):
+            def handle(self):
+                session: Dict[str, Any] = {}
+                try:
+                    while True:
+                        msg = recv_msg(self.request)
+                        if msg is None:
+                            break
+                        reply = outer.handler(msg, session)
+                        send_msg(self.request, reply)
+                finally:
+                    if outer.on_disconnect:
+                        outer.on_disconnect(session)
+
+        class _Server(socketserver.ThreadingTCPServer):
+            daemon_threads = True
+            allow_reuse_address = True
+
+        self.handler = handler
+        self.on_disconnect = on_disconnect
+        self._server = _Server((host, port), _Handler)
+        self.address: Tuple[str, int] = self._server.server_address
+        self._thread = threading.Thread(target=self._server.serve_forever,
+                                        daemon=True)
+
+    def start(self) -> "RpcServer":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+
+
+class RpcClient:
+    def __init__(self, address: Tuple[str, int], timeout: float = 10.0):
+        self._sock = socket.create_connection(address, timeout=timeout)
+
+    def call(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        send_msg(self._sock, msg)
+        reply = recv_msg(self._sock)
+        if reply is None:
+            raise ConnectionError("proxy closed the connection")
+        return reply
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass

@@ -1,0 +1,3 @@
+from .pipeline import ShardedTokenPipeline
+
+__all__ = ["ShardedTokenPipeline"]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+The paper itself (LCAP) is host-side and has no numeric kernel; the
+kernels here serve the framework substrate the assignment requires:
+flash_attention — blockwise attention with causal/sliding-window/
+softcap/GQA, the dominant FLOP sink of every attention architecture in
+the assignment.  Validated in interpret mode against ref.py on CPU; the
+BlockSpec tiling targets TPU VMEM/MXU.
+"""
+
+from . import ops, ref
+from .ops import flash_attention
+
+__all__ = ["ops", "ref", "flash_attention"]

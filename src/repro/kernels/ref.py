@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash attention kernel (independent of
+models.layers; deliberately the simplest possible formulation)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_reference(q, k, v, *, causal=True, window=0, cap=0.0,
+                        scale=None):
+    """q: (B,Sq,H,D); k,v: (B,Sk,KV,D).  Returns (B,Sq,H,D) in q.dtype."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    kh = jnp.repeat(k, G, axis=2)                       # (B,Sk,H,D)
+    vh = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kh.astype(jnp.float32)) * scale
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= kp <= qp
+    if window:
+        ok &= kp > qp - window
+    s = jnp.where(ok[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vh.astype(jnp.float32))
+    return o.astype(q.dtype)

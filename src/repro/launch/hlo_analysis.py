@@ -1,0 +1,88 @@
+"""Post-compile HLO analysis: collective-byte accounting + roofline.
+
+cost_analysis() gives per-device HLO FLOPs / bytes-accessed; collective
+traffic is NOT in cost_analysis, so we parse the optimized per-device
+HLO text and sum the tensor sizes of every collective op.
+
+Convention (documented in EXPERIMENTS.md): sizes are the collective's
+OUTPUT tensor bytes per device; all-reduce counts x2 (ring
+reduce-scatter + all-gather).  The (N-1)/N ring factor is folded into
+~1.  The resulting ``collective_bytes`` is per-device traffic, so
+
+    collective_s = collective_bytes / ICI_BW          (per chip)
+    compute_s    = flops_per_device / PEAK_FLOPS      (per chip)
+    memory_s     = bytes_per_device / HBM_BW          (per chip)
+
+which matches the assignment formulas after multiplying numerator and
+denominator by the chip count.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<types>\(?[^)=]*?\)?)\s*"
+    r"(?P<op>" + "|".join(COLLECTIVES) + r")(?P<suffix>-start|-done)?\(",
+)
+
+
+def _shape_bytes(types: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(types):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective type: {'bytes': ..., 'count': ...} from optimized
+    per-device HLO."""
+    out = {c: {"bytes": 0, "count": 0} for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if m.group("suffix") == "-done":
+            continue     # async pair: count the -start only
+        size = _shape_bytes(m.group("types"))
+        mult = 2 if op == "all-reduce" else 1
+        out[op]["bytes"] += size * mult
+        out[op]["count"] += 1
+    return out
+
+
+def total_collective_bytes(per_type: Dict[str, Dict[str, float]]) -> int:
+    return int(sum(v["bytes"] for v in per_type.values()))
+
+
+def roofline(flops_per_dev: float, bytes_per_dev: float,
+             coll_bytes_per_dev: float, *, peak_flops: float, hbm_bw: float,
+             ici_bw: float) -> Dict[str, float]:
+    compute_s = flops_per_dev / peak_flops
+    memory_s = bytes_per_dev / hbm_bw
+    collective_s = coll_bytes_per_dev / ici_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {**terms, "dominant": dominant,
+            "step_time_lower_bound_s": bound,
+            # fraction of the step the compute roofline would occupy if
+            # the dominant term were fully overlapped-free:
+            "roofline_fraction": compute_s / bound if bound > 0 else 0.0}

@@ -1,0 +1,12 @@
+"""Model substrate: unified transformer covering all assigned archs."""
+
+from .config import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+from .transformer import (abstract_params, count_params, decode_step, forward,
+                          init_cache, init_params, loss_fn,
+                          model_flops_per_token, param_axes, param_layout,
+                          prefill)
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "shape_applicable",
+           "param_layout", "init_params", "abstract_params", "param_axes",
+           "count_params", "model_flops_per_token", "forward", "loss_fn",
+           "prefill", "decode_step", "init_cache"]

@@ -1,0 +1,463 @@
+"""Model building blocks, pure JAX (jnp + lax), shard-annotated.
+
+Everything takes explicit param pytrees; no framework magic.  Attention
+has three interchangeable implementations (exact same math):
+
+- ``naive``     — materializes (…, S, T) scores; CPU unit tests, decode.
+- ``blockwise`` — double-scan flash-style streaming over KV blocks with a
+                  running log-sum-exp; the memory-footprint shape the
+                  Pallas kernel mirrors; used for long-sequence lowering.
+- ``pallas``    — the TPU kernel in repro.kernels (TARGET hardware).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..runtime.sharding import axis_size, lshard
+from .config import ModelConfig
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 1024
+
+# Dry-run probe hook: XLA cost_analysis counts while-loop bodies once, so
+# the differential-compile probes unroll the streaming-attention loops to
+# obtain loop-exact FLOP/collective counts (launch/dryrun.py sets this).
+UNROLL_BLOCKS = False
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rms_norm_gated(x, z, w, eps: float = 1e-6):
+    """Mamba2 output norm: RMSNorm(x * silu(z))."""
+    x = x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return rms_norm(x, w, eps)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32)
+                     / (head_dim // 2))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,d/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int):
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) *
+                  (-math.log(10000.0) / d))
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ----------------------------------------------------------------- attention
+def _mask_bias(q_pos, k_pos, causal: bool, window: int):
+    """Additive mask bias (..., Sq, Sk) from position vectors."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]        # q - k
+    ok = jnp.ones(diff.shape, jnp.bool_)
+    if causal:
+        ok &= diff >= 0
+    if window:
+        ok &= diff < window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def attention_core_naive(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                         cap=0.0, scale=None):
+    """q: (B,Sq,H,D); k,v: (B,Sk,KV,D); GQA by head grouping.
+    Returns (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale or D ** -0.5
+    qg = q.reshape(B, Sq, KV, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = softcap(scores, cap)
+    bias = _mask_bias(q_pos, k_pos, causal, window)         # (B,Sq,Sk) or (Sq,Sk)
+    while bias.ndim < scores.ndim:
+        bias = bias[:, None] if bias.ndim >= 3 else bias[None]
+    scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention_core_blockwise(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                             cap=0.0, scale=None,
+                             block_q=DEFAULT_BLOCK_Q,
+                             block_k=DEFAULT_BLOCK_K,
+                             skip_blocks=False):
+    """Flash-style streaming attention (same signature/semantics as naive).
+
+    Outer scan over q blocks, inner scan over kv blocks with running
+    (max, denom, acc).  With ``skip_blocks`` the inner loop is unrolled
+    per q block and statically skips fully-masked causal blocks (used by
+    the perf-optimized configs; identical numerics)."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale or D ** -0.5
+    if UNROLL_BLOCKS:
+        # probe mode: keep the unrolled grid small; FLOPs are invariant
+        # to the block size, which is all the probes measure.
+        block_q = max(block_q, -(-Sq // 8))
+        block_k = max(block_k, -(-Sk // 8))
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    nq = -(-Sq // block_q)
+    nk = -(-Sk // block_k)
+    # pad to block multiples
+    pq, pk = nq * block_q - Sq, nk * block_k - Sk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pq)), constant_values=-1)
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pk)),
+                        constant_values=jnp.iinfo(jnp.int32).max)
+
+    qb = q.reshape(B, nq, block_q, KV, G, D).transpose(1, 0, 2, 3, 4, 5)
+    qpb = q_pos.reshape(B, nq, block_q).transpose(1, 0, 2)
+    kb = k.reshape(B, nk, block_k, KV, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, block_k, KV, D).transpose(1, 0, 2, 3, 4)
+    kpb = k_pos.reshape(B, nk, block_k).transpose(1, 0, 2)
+
+    def q_block(qi, qp):
+        """qi: (B, bq, KV, G, D); returns (B, bq, KV, G, D)."""
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            ki, vi, kp = inp
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qi.astype(jnp.float32),
+                           ki.astype(jnp.float32)) * scale
+            s = softcap(s, cap)
+            bias = _mask_bias(qp, kp, causal, window)       # (B, bq, bk)
+            s = s + bias[:, None, None]
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, vi.astype(jnp.float32))
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, KV, G, block_q, D), jnp.float32)
+        m0 = jnp.full((B, KV, G, block_q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, block_q), jnp.float32)
+        carry, _ = lax.scan(kv_step, (acc0, m0, l0), (kb, vb, kpb),
+                            unroll=nk if UNROLL_BLOCKS else 1)
+        acc, m, l = carry
+        l = jnp.where(l == 0.0, 1.0, l)
+        out = acc / l[..., None]
+        return out.transpose(0, 3, 1, 2, 4)                 # (B,bq,KV,G,D)
+
+    _, out = lax.scan(lambda c, t: (c, q_block(t[0], t[1])), None,
+                      (qb, qpb), unroll=nq if UNROLL_BLOCKS else 1)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * block_q, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def attention_core(q, k, v, q_pos, k_pos, impl="naive", **kw):
+    if impl == "blockwise":
+        return attention_core_blockwise(q, k, v, q_pos, k_pos, **kw)
+    if impl == "pallas":
+        from ..kernels import ops as kops
+        return kops.flash_attention(q, k, v, q_pos, k_pos, **kw)
+    kw.pop("block_q", None), kw.pop("block_k", None), kw.pop("skip_blocks", None)
+    return attention_core_naive(q, k, v, q_pos, k_pos, **kw)
+
+
+# ------------------------------------------------------------ attention layer
+def attn_params_layout(cfg: ModelConfig, cross: bool = False):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    lay = {
+        "wq": ((D, H * hd), ("embed", "qkv"), D ** -0.5),
+        "wk": ((D, KV * hd), ("embed", "qkv"), D ** -0.5),
+        "wv": ((D, KV * hd), ("embed", "qkv"), D ** -0.5),
+        "wo": ((H * hd, D), ("qkv", "embed"), (H * hd) ** -0.5),
+    }
+    if cfg.qkv_bias and not cross:
+        lay.update({"bq": ((H * hd,), ("qkv",), 0.0),
+                    "bk": ((KV * hd,), ("qkv",), 0.0),
+                    "bv": ((KV * hd,), ("qkv",), 0.0)})
+    return lay
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _proj_qkv(p, x, cfg: ModelConfig, rope: bool, positions):
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q, k, v = (q + p["bq"].astype(x.dtype), k + p["bk"].astype(x.dtype),
+                   v + p["bv"].astype(x.dtype))
+    q, k, v = _split_heads(q, H, hd), _split_heads(k, KV, hd), _split_heads(v, KV, hd)
+    if rope and cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def pad_heads_for_tp(q, k, v):
+    """Pad heads so the q-head count divides the tensor-parallel extent,
+    preserving the GQA q->kv grouping (zero-padded heads produce zeros
+    that are sliced off afterwards).  Two strategies, cheapest wins:
+    (A) pad the per-kv-group fan-out G; (B) pad whole kv groups."""
+    tp = axis_size("heads")
+    H, KV = q.shape[2], k.shape[2]
+    if tp <= 1 or (H % tp == 0 and H % KV == 0):
+        return q, k, v, H
+    G = H // KV
+
+    def ceil_to(g, mod):
+        while (g * mod) % tp:
+            g += 1
+        return g
+
+    GA = ceil_to(G, KV)              # strategy A: H2 = KV * GA
+    KVB = KV
+    while (KVB * G) % tp:
+        KVB += 1                     # strategy B: H2 = KVB * G
+    if KV * GA <= KVB * G:           # pad fan-out within each kv group
+        B_, S, _, D = q.shape
+        qg = q.reshape(B_, S, KV, G, D)
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, GA - G), (0, 0)))
+        return qg.reshape(B_, S, KV * GA, D), k, v, H
+    # pad whole kv groups (adds zero kv heads and their zero q heads)
+    q2 = jnp.pad(q, ((0, 0), (0, 0), (0, (KVB - KV) * G), (0, 0)))
+    k2 = jnp.pad(k, ((0, 0), (0, 0), (0, KVB - KV), (0, 0)))
+    v2 = jnp.pad(v, ((0, 0), (0, 0), (0, KVB - KV), (0, 0)))
+    return q2, k2, v2, H
+
+
+def run_attention(q, k, v, q_pos, k_pos, cfg: ModelConfig, *, causal=True,
+                  window=0, impl="naive"):
+    """Sharded full-sequence attention with TP head padding; returns
+    (B,S,H,hd) with the ORIGINAL head count and grouping."""
+    H, KV = q.shape[2], k.shape[2]
+    q2, k2, v2, H_orig = pad_heads_for_tp(q, k, v)
+    q2 = lshard(q2, "batch", "seq", "heads", "head_dim")
+    k2 = lshard(k2, "batch", "seq", "kv_heads", "head_dim")
+    v2 = lshard(v2, "batch", "seq", "kv_heads", "head_dim")
+    out = attention_core(q2, k2, v2, q_pos, k_pos, impl=impl, causal=causal,
+                         window=window, cap=cfg.attn_softcap)
+    if out.shape[2] != H_orig:
+        if k2.shape[2] == KV:                       # strategy A: regroup
+            G2 = out.shape[2] // KV
+            B_, S = out.shape[0], out.shape[1]
+            out = out.reshape(B_, S, KV, G2, -1)[:, :, :, :H // KV, :]
+            out = out.reshape(B_, S, H_orig, -1)
+        else:                                       # strategy B: tail slice
+            out = out[:, :, :H_orig, :]
+    return out
+
+
+def attention_layer(p, x, cfg: ModelConfig, *, positions, window=0,
+                    impl="naive") -> jnp.ndarray:
+    """Self-attention over the full (causal) sequence: (B,S,D)->(B,S,D)."""
+    q, k, v = _proj_qkv(p, x, cfg, rope=True, positions=positions)
+    out = run_attention(q, k, v, positions, positions, cfg, causal=True,
+                        window=window, impl=impl)
+    out = out.reshape(*x.shape[:-1], -1)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def cross_attention_layer(p, x, enc_kv, cfg: ModelConfig) -> jnp.ndarray:
+    """Decoder->encoder attention; enc_kv = (k, v) precomputed from the
+    encoder output: (B, F, KV, hd)."""
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = _split_heads(x @ p["wq"].astype(x.dtype), H, hd)
+    k, v = enc_kv
+    B, Sq = q.shape[0], q.shape[1]
+    q_pos = jnp.zeros((B, Sq), jnp.int32)
+    k_pos = jnp.zeros((B, k.shape[1]), jnp.int32)
+    out = run_attention(q, k, v, q_pos, k_pos, cfg, causal=False,
+                        impl="naive")
+    out = out.reshape(*x.shape[:-1], -1)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def decode_attention(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
+                     window=0):
+    """Single-token decode: x (B,1,D), cache (B,Skv,KV,hd), pos (B,) int.
+
+    Sliding-window layers use a RING-BUFFER cache of exactly ``window``
+    slots (slot j holds the newest position p with p % window == j) —
+    the cache read per step is O(window), not O(context).
+    Returns (out (B,1,D), new_k, new_v)."""
+    B = x.shape[0]
+    S_slot = cache_k.shape[1]
+    ring = bool(window) and S_slot == window
+    q, k, v = _proj_qkv(p, x, cfg, rope=True,
+                        positions=pos[:, None])
+    write_pos = pos % S_slot if ring else pos
+    cache_k = _cache_insert(cache_k, k, write_pos)
+    cache_v = _cache_insert(cache_v, v, write_pos)
+    cache_k = lshard(cache_k, "batch", "seq_kv", "kv_heads", "head_dim")
+    cache_v = lshard(cache_v, "batch", "seq_kv", "kv_heads", "head_dim")
+    slots = jnp.arange(S_slot, dtype=jnp.int32)[None, :]
+    if ring:
+        # logical position held by each slot, given the current pos
+        k_pos = pos[:, None] - (pos[:, None] - slots) % S_slot
+        valid = k_pos >= 0
+    else:
+        k_pos = jnp.broadcast_to(slots, (B, S_slot))
+        valid = k_pos <= pos[:, None]
+        if window:
+            valid &= k_pos > pos[:, None] - window
+    k_pos_masked = jnp.where(valid, k_pos, jnp.iinfo(jnp.int32).max)
+    out = attention_core_naive(q, cache_k, cache_v, pos[:, None],
+                               k_pos_masked, causal=True, window=0,
+                               cap=cfg.attn_softcap)
+    out = out.reshape(B, 1, -1)
+    return out @ p["wo"].astype(x.dtype), cache_k, cache_v
+
+
+def _cache_insert(cache, new, pos):
+    """cache (B,S,KV,hd), new (B,1,KV,hd), pos (B,) — scatter one row per
+    batch element (in-place on a donated cache buffer)."""
+    B = cache.shape[0]
+    return cache.at[jnp.arange(B), pos].set(new[:, 0].astype(cache.dtype))
+
+
+# ------------------------------------------------------------------ MLP / MoE
+def mlp_params_layout(cfg: ModelConfig, d_ff: Optional[int] = None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    return {
+        "w_gate": ((D, F), ("embed", "mlp"), D ** -0.5),
+        "w_up": ((D, F), ("embed", "mlp"), D ** -0.5),
+        "w_down": ((F, D), ("mlp", "embed"), F ** -0.5),
+    }
+
+
+def _act(x, kind: str):
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x)
+
+
+def mlp_layer(p, x, cfg: ModelConfig):
+    h = _act(x @ p["w_gate"].astype(x.dtype), cfg.act) * \
+        (x @ p["w_up"].astype(x.dtype))
+    h = lshard(h, "batch", "seq", "mlp")
+    return h @ p["w_down"].astype(x.dtype)
+
+
+def moe_params_layout(cfg: ModelConfig):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    return {
+        "w_router": ((D, E), ("embed", None), D ** -0.5),
+        "w_gate": ((E, D, F), ("experts", "embed", "expert_mlp"), D ** -0.5),
+        "w_up": ((E, D, F), ("experts", "embed", "expert_mlp"), D ** -0.5),
+        "w_down": ((E, F, D), ("experts", "expert_mlp", "embed"), F ** -0.5),
+    }
+
+
+def _dispatch_positions(expert_ids, n_experts):
+    """expert_ids: (T,) int — position of each token within its expert's
+    capacity buffer, computed by sort ranking (no T x E one-hot)."""
+    T = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids, stable=True)
+    sorted_e = expert_ids[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(n_experts), side="left")
+    pos_sorted = jnp.arange(T) - starts[sorted_e]
+    pos = jnp.zeros(T, jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    return pos
+
+
+def moe_layer(p, x, cfg: ModelConfig, capacity: Optional[int] = None):
+    """Group-local scatter dispatch -> expert FFN (EP over 'experts') ->
+    combine.  x: (B,S,D); groups = batch rows (data-parallel local).
+    Returns (out, aux_loss)."""
+    B, S, D = x.shape
+    E, K, F = cfg.n_experts, cfg.top_k, cfg.moe_d_ff
+    C = capacity or max(1, min(S, int(math.ceil(S * K / E * cfg.capacity_factor))))
+
+    logits = jnp.einsum("bsd,de->bse", x, p["w_router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    top_p, top_e = lax.top_k(probs, K)                      # (B,S,K)
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch-style)
+    me = probs.mean(axis=(0, 1))                            # (E,)
+    ce = jnp.zeros(E).at[top_e.reshape(-1)].add(
+        jnp.ones(top_e.size)) / max(top_e.size, 1)
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    # --- vectorized over groups (B = data-parallel-local batch rows) -----
+    flat_e = top_e.reshape(B, S * K)
+    pos = jax.vmap(lambda e: _dispatch_positions(e, E))(flat_e)  # (B,S*K)
+    keepf = (pos < C) & (top_p.reshape(B, S * K) > 0)
+    keep = keepf.astype(x.dtype)
+    tok = jnp.repeat(jnp.arange(S), K)[None].repeat(B, 0)        # (B,S*K)
+
+    xtok = jnp.take_along_axis(
+        x, tok[..., None], axis=1)                               # (B,S*K,D)
+    pos_c = jnp.clip(pos, 0, C - 1)
+    buf = jnp.zeros((B, E, C, D), x.dtype)
+    bidx = jnp.arange(B)[:, None].repeat(S * K, 1)
+    buf = buf.at[bidx, flat_e, pos_c].add(xtok * keep[..., None])
+    if cfg.moe_variant == "replicated_buf":
+        # scatter stays model-rank-local; each rank computes only its
+        # experts below (weights are expert-sharded), so the buffer is
+        # never reshuffled across the 'model' axis.
+        buf = lshard(buf, "batch", None, None, None)
+    else:
+        buf = lshard(buf, "batch", "experts", None, None)
+
+    h = _act(jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(x.dtype)),
+             cfg.act)
+    h = h * jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(x.dtype))
+    h = lshard(h, "batch", "experts", None, "expert_mlp")
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(x.dtype))
+    if cfg.moe_variant == "replicated_buf":
+        # one explicit all-gather of the (E,C,D) capacity buffer; the
+        # token combine below then gathers from a REPLICATED buffer and
+        # stays rank-local (otherwise XLA all-reduces full (B,S*K,D)
+        # f32 tensors — see EXPERIMENTS.md §Perf cell C).
+        out_buf = lshard(out_buf, "batch", None, None, None)
+    else:
+        out_buf = lshard(out_buf, "batch", "experts", None, None)
+
+    # combine: gather each (token, k) slot's output, weight by router prob
+    gathered = out_buf[bidx, flat_e, pos_c]                      # (B,S*K,D)
+    if cfg.moe_variant == "replicated_buf":
+        gathered = lshard(gathered, "batch", None, None)
+    gathered = gathered * (keep * top_p.reshape(B, S * K).astype(x.dtype))[..., None]
+    out = jnp.zeros((B, S, D), x.dtype).at[
+        jnp.arange(B)[:, None].repeat(S * K, 1), tok].add(gathered)
+    return out, aux

@@ -1,0 +1,3 @@
+from . import elastic, sharding, specs, steps, straggler
+
+__all__ = ["elastic", "sharding", "specs", "steps", "straggler"]

@@ -1,0 +1,115 @@
+"""Logical-axis sharding (MaxText-style rules).
+
+Model code annotates params/activations with *logical* axis names;
+a ``LogicalRules`` context maps them to mesh axes.  Outside a rules
+context every annotation is a no-op, so the same model code runs in CPU
+unit tests, the single-pod mesh and the multi-pod mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+# default rules for the single-pod (data, model) mesh
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": "data",          # global batch
+    "seq": None,              # sequence (replicated by default)
+    "seq_kv": "model",        # cached KV sequence in decode
+    "embed": "data",          # d_model rows of weights (FSDP shards here)
+    "mlp": "model",           # d_ff / ffn hidden (tensor parallel)
+    "heads": "model",         # attention heads (tensor parallel)
+    "kv_heads": None,         # kv heads (replicated; small for GQA)
+    "head_dim": None,
+    "qkv": "model",           # fused q/k/v output dim
+    "vocab": "model",         # embedding/logit vocab dim
+    "experts": "model",       # expert parallelism
+    "expert_mlp": None,       # per-expert ffn hidden
+    "layers": None,           # stacked scan bodies
+    "conv": None,
+    "ssm_inner": "model",     # SSD inner width
+    "ssm_heads": "model",
+    "state": None,
+    "frames": None,
+}
+
+# multi-pod: DP spans ("pod", "data")
+MULTIPOD_OVERRIDES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+}
+
+
+class LogicalRules:
+    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, Axis]] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if "pod" in mesh.axis_names:
+            self.rules.update(MULTIPOD_OVERRIDES)
+        if rules:
+            self.rules.update(rules)
+
+    def spec(self, logical_axes: Sequence[Optional[str]]) -> P:
+        out = []
+        used = set()
+        for name in logical_axes:
+            ax = self.rules.get(name) if name else None
+            # a mesh axis may be used at most once per spec
+            if ax is not None:
+                flat = (ax,) if isinstance(ax, str) else tuple(ax)
+                if any(a in used for a in flat):
+                    ax = None
+                else:
+                    used.update(flat)
+            out.append(ax)
+        return P(*out)
+
+    def sharding(self, logical_axes: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes))
+
+
+_tls = threading.local()
+
+
+def current_rules() -> Optional[LogicalRules]:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[LogicalRules]):
+    prev = getattr(_tls, "rules", None)
+    _tls.rules = rules
+    try:
+        yield rules
+    finally:
+        _tls.rules = prev
+
+
+def axis_size(logical_name: str) -> int:
+    """Mesh extent the given logical axis maps to (1 without rules)."""
+    rules = current_rules()
+    if rules is None:
+        return 1
+    ax = rules.rules.get(logical_name)
+    if ax is None:
+        return 1
+    if isinstance(ax, str):
+        return rules.mesh.shape[ax]
+    import numpy as _np
+    return int(_np.prod([rules.mesh.shape[a] for a in ax]))
+
+
+def lshard(x, *logical_axes):
+    """Constrain ``x`` to the mapping of ``logical_axes`` (no-op without
+    an active rules context)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    if x.ndim != len(logical_axes):
+        raise ValueError(f"rank {x.ndim} vs axes {logical_axes}")
+    return jax.lax.with_sharding_constraint(x, rules.sharding(logical_axes))

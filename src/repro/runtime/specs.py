@@ -1,0 +1,125 @@
+"""Input specs + shardings for every (arch x shape x mesh) cell.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins for
+every model input (no device allocation) — what the multi-pod dry-run
+lowers against.  ``cell_rules`` adapts the logical->mesh mapping to the
+cell (e.g. batch unsharded when the batch does not divide the DP axes).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import transformer as T
+from ..models.config import ModelConfig, ShapeConfig
+from ..optim import adamw
+from .sharding import DEFAULT_RULES, LogicalRules
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, str):
+        return mesh.shape[ax]
+    return int(np.prod([mesh.shape[a] for a in ax]))
+
+
+def cell_rules(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               overrides: Optional[Dict[str, Any]] = None) -> LogicalRules:
+    rules = LogicalRules(mesh, overrides)
+    dp = _axis_size(mesh, rules.rules["batch"])
+    if shape.global_batch % dp != 0:
+        # e.g. long_500k batch=1: replicate the batch dimension
+        rules.rules["batch"] = None
+    return rules
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig,
+                 kind: Optional[str] = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract training/prefill batch: tokens/labels (+ stub modality
+    frontends)."""
+    kind = kind or shape.kind
+    B, S = shape.global_batch, shape.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.is_encoder_decoder:
+        out["frames"] = jax.ShapeDtypeStruct((B, cfg.n_frames, cfg.d_model),
+                                             jnp.bfloat16)
+    if cfg.n_image_patches:
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_patches, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeConfig,
+               kind: Optional[str] = None) -> Dict[str, Tuple]:
+    kind = kind or shape.kind
+    out = {"tokens": ("batch", None)}
+    if kind == "train":
+        out["labels"] = ("batch", None)
+    if cfg.is_encoder_decoder:
+        out["frames"] = ("batch", "frames", None)
+    if cfg.n_image_patches:
+        out["image_embeds"] = ("batch", None, None)
+    return out
+
+
+def shardings_of(rules: LogicalRules, axes_tree):
+    return jax.tree.map(
+        lambda axes: rules.sharding(axes), axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def train_cell(cfg: ModelConfig, shape: ShapeConfig, rules: LogicalRules,
+               param_dtype=None):
+    """(abstract_args, in_shardings, out_shardings) for train_step."""
+    params = T.abstract_params(cfg, param_dtype or jnp.float32)
+    opt = adamw.abstract_state(params)
+    batch = batch_struct(cfg, shape)
+    p_shard = shardings_of(rules, T.param_axes(cfg))
+    opt_shard = adamw.AdamWState(
+        step=NamedSharding(rules.mesh, P()), m=p_shard,
+        v=jax.tree.map(lambda s: s, p_shard))
+    b_shard = shardings_of(rules, batch_axes(cfg, shape))
+    metrics_shard = {k: NamedSharding(rules.mesh, P())
+                     for k in ("loss", "grad_norm", "lr")}
+    return ((params, opt, batch),
+            (p_shard, opt_shard, b_shard),
+            (p_shard, opt_shard, metrics_shard))
+
+
+def prefill_cell(cfg: ModelConfig, shape: ShapeConfig, rules: LogicalRules,
+                 param_dtype=None):
+    params = T.abstract_params(cfg, param_dtype or jnp.float32)
+    batch = batch_struct(cfg, shape, kind="prefill")
+    p_shard = shardings_of(rules, T.param_axes(cfg))
+    b_shard = shardings_of(rules, batch_axes(cfg, shape, kind="prefill"))
+    cache_shard = shardings_of(rules, T.cache_axes(cfg))
+    logits_shard = rules.sharding(("batch", "vocab"))
+    return ((params, batch), (p_shard, b_shard),
+            (logits_shard, cache_shard))
+
+
+def decode_cell(cfg: ModelConfig, shape: ShapeConfig, rules: LogicalRules,
+                param_dtype=None):
+    B, S = shape.global_batch, shape.seq_len
+    params = T.abstract_params(cfg, param_dtype or jnp.float32)
+    cache = T.init_cache(cfg, B, S, abstract=True)
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    p_shard = shardings_of(rules, T.param_axes(cfg))
+    cache_shard = shardings_of(rules, T.cache_axes(cfg))
+    tok_shard = rules.sharding(("batch", None))
+    pos_shard = rules.sharding(("batch",))
+    logits_shard = rules.sharding(("batch", "vocab"))
+    return ((params, cache, token, pos),
+            (p_shard, cache_shard, tok_shard, pos_shard),
+            (logits_shard, cache_shard))

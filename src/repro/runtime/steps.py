@@ -1,0 +1,116 @@
+"""Step builders: the functions that get pjit-ed onto the mesh.
+
+- ``build_train_step``  — microbatched (grad-accumulation scan) training
+  step with remat, fp32 master params, AdamW, loss in the carry.
+- ``build_prefill_step`` / ``build_decode_step`` — serving: prompt
+  ingestion returning a KV cache; single-token decode updating it.
+
+All of them are pure (params/opt/cache in -> out) so they lower with
+ShapeDtypeStruct inputs — this is what the multi-pod dry-run compiles.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..optim import adamw
+from .sharding import lshard
+
+
+class TrainHParams(NamedTuple):
+    n_micro: int = 1
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    attn_impl: str = "naive"
+    remat: bool = True
+    remat_policy: str = "dots"       # dots | none | everything
+
+
+REMAT_POLICIES = {
+    "dots": lambda: jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    "none": lambda: jax.checkpoint_policies.nothing_saveable,
+    "everything": lambda: jax.checkpoint_policies.everything_saveable,
+}
+
+
+def build_train_step(cfg: ModelConfig, hp: TrainHParams):
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics).  ``batch`` is a dict with tokens/labels
+    (+ frames / image_embeds when the arch needs them), global batch
+    leading."""
+
+    policy = REMAT_POLICIES[hp.remat_policy]()
+
+    def micro_loss(params, micro):
+        kw = {k: v for k, v in micro.items() if k not in ("tokens", "labels")}
+        total, (loss, aux) = T.loss_fn(params, cfg, micro["tokens"],
+                                       micro["labels"], impl=hp.attn_impl,
+                                       remat=hp.remat, remat_policy=policy,
+                                       **kw)
+        return total, (loss, aux)
+
+    grad_fn = jax.value_and_grad(micro_loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        B = batch["tokens"].shape[0]
+        n_micro = min(hp.n_micro, B)
+        assert B % n_micro == 0, (B, n_micro)
+
+        def reshape_micro(x):
+            return x.reshape(n_micro, B // n_micro, *x.shape[1:])
+
+        micros = jax.tree.map(reshape_micro, batch)
+
+        def accum(carry, micro):
+            gacc, lacc = carry
+            (_, (loss, aux)), grads = grad_fn(params, micro)
+            gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                gacc, grads)
+            return (gacc, lacc + loss), None
+
+        gacc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        # probe mode unrolls the accumulation so cost_analysis counts
+        # every microbatch (see launch/dryrun.py cost model)
+        (gsum, lsum), _ = lax.scan(accum, (gacc0, jnp.zeros((), jnp.float32)),
+                                   micros,
+                                   unroll=n_micro if T.UNROLL_LAYERS else 1)
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        lr = adamw.cosine_lr(opt_state.step, peak=hp.peak_lr,
+                             warmup=hp.warmup, total=hp.total_steps)
+        params, opt_state, gnorm = adamw.update(
+            grads, opt_state, params, lr=lr,
+            weight_decay=hp.weight_decay, max_norm=hp.max_grad_norm)
+        metrics = {"loss": lsum / n_micro, "grad_norm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, max_seq: Optional[int] = None,
+                       attn_impl: str = "blockwise"):
+    def prefill_step(params, batch):
+        kw = {k: v for k, v in batch.items() if k != "tokens"}
+        logits, cache = T.prefill(params, cfg, batch["tokens"],
+                                  max_seq=max_seq, impl=attn_impl, **kw)
+        return logits, cache
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, token, pos):
+        logits, cache = T.decode_step(params, cfg, token, cache, pos)
+        return logits[:, 0, :], cache
+
+    return decode_step

@@ -1,0 +1,18 @@
+"""repro.track — LCAP integrated as the framework's activity backbone.
+
+Producers: every runtime shard owns an ``ActivityTracker`` (an ``Llog``
+producer) and emits a changelog record for each state-modifying training
+operation.  Consumers are LCAP groups: a load-balanced metrics database
+(the Robinhood analogue), the checkpoint committer, the straggler
+detector, the elastic controller, and serving-side cache invalidation
+(the Ganesha analogue).
+"""
+
+from .tracker import ActivityTracker
+from .consumers import (CacheInvalidator, CheckpointCommitter, ElasticController,
+                        MetricsDB, StragglerDetector)
+from .bootstrap import synthesize_index_stream
+
+__all__ = ["ActivityTracker", "MetricsDB", "CheckpointCommitter",
+           "StragglerDetector", "ElasticController", "CacheInvalidator",
+           "synthesize_index_stream"]

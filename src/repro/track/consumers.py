@@ -1,0 +1,231 @@
+"""LCAP consumer groups used by the framework.
+
+- ``MetricsDB`` — the Robinhood analogue: N load-balanced instances of
+  one group replicate the record stream into one shared SQLite database
+  (paper §III: "multiple instances of robinhood operating on a shared
+  database").
+- ``CheckpointCommitter`` — consumes CKPT_WRITE records; once every
+  shard of a step has been seen (across all producers), publishes the
+  checkpoint-commit manifest.  Runs as a load-balanced group; members
+  coordinate through the shared manifest store.
+- ``StragglerDetector`` — consumes HEARTBEAT records; EWMA per host +
+  z-score against the fleet median flags stragglers.
+- ``ElasticController`` — consumes ELASTIC_JOIN/LEAVE; recomputes the
+  device plan for the next restart window.
+- ``CacheInvalidator`` — the Ganesha analogue (§IV-C-1): ephemeral
+  consumer of EVICT records that invalidates a local cache.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import sqlite3
+import threading
+from collections import defaultdict
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..core import records as R
+from ..core.reader import LocalReader
+
+
+class _GroupWorker:
+    """Base: pull records from a LocalReader, process, ack."""
+
+    def __init__(self, proxy, group: str, flags: int = R.CLF_SUPPORTED):
+        self.reader = LocalReader(proxy, group, flags=flags)
+
+    def poll(self, max_records: int = 256) -> int:
+        batch = self.reader.fetch(max_records)
+        for pid, rec in batch:
+            self.handle(pid, rec)
+            self.reader.ack(pid, rec.index)
+        return len(batch)
+
+    def handle(self, pid: str, rec: R.ChangelogRecord) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        self.reader.close()
+
+
+class MetricsDB(_GroupWorker):
+    """Replicates the activity stream into a shared SQLite DB."""
+
+    SCHEMA = """
+    CREATE TABLE IF NOT EXISTS events (
+        producer TEXT, idx INTEGER, type INTEGER, time INTEGER,
+        run INTEGER, oid INTEGER, ver INTEGER, name TEXT, jobid TEXT,
+        pod INTEGER, host INTEGER, m0 REAL, m1 REAL, m2 REAL,
+        PRIMARY KEY (producer, idx) ON CONFLICT REPLACE
+    );
+    """
+
+    def __init__(self, proxy, db_path: str, group: str = "metrics"):
+        super().__init__(proxy, group)
+        self.db_path = db_path
+        self.conn = sqlite3.connect(db_path, timeout=30.0,
+                                    check_same_thread=False)
+        self.conn.execute("PRAGMA journal_mode=WAL")
+        self.conn.execute(self.SCHEMA)
+        self.conn.commit()
+
+    def handle(self, pid: str, rec: R.ChangelogRecord) -> None:
+        m = (list(rec.metrics or []) + [None] * 3)[:3]
+        shard = rec.shard or (0, 0, 0, 0)
+        self.conn.execute(
+            "INSERT INTO events VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?)",
+            (pid, rec.index, rec.type, rec.time, rec.tfid.seq, rec.tfid.oid,
+             rec.tfid.ver, rec.name.decode(errors="replace"),
+             (rec.jobid or b"").decode(errors="replace"),
+             shard[0], shard[1], m[0], m[1], m[2]))
+        self.conn.commit()
+
+    def query(self, sql: str, args=()) -> List[tuple]:
+        return list(self.conn.execute(sql, args))
+
+    def close(self) -> None:
+        super().close()
+        self.conn.close()
+
+
+class CheckpointCommitter(_GroupWorker):
+    """Watches CKPT_WRITE records; commits when all shards of a step are
+    present.  The shared manifest dir is the coordination point, so the
+    group can be load-balanced (any member may complete a step)."""
+
+    def __init__(self, proxy, manifest_dir: str, group: str = "ckpt"):
+        super().__init__(proxy, group)
+        self.dir = manifest_dir
+        os.makedirs(manifest_dir, exist_ok=True)
+        self._lock = threading.Lock()
+        self.committed: Set[int] = set()
+
+    def _state_path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step-{step:08d}.shards.json")
+
+    def manifest_path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step-{step:08d}.manifest.json")
+
+    def handle(self, pid: str, rec: R.ChangelogRecord) -> None:
+        if rec.type != R.CL_CKPT_WRITE:
+            return
+        step = rec.tfid.ver
+        shard_id = rec.tfid.oid
+        total = (rec.xattr or {}).get("total_shards", 0)
+        with self._lock:
+            path = self._state_path(step)
+            state = {"total": total, "shards": {}}
+            if os.path.exists(path):
+                with open(path) as fh:
+                    state = json.load(fh)
+            state["shards"][str(shard_id)] = {
+                "path": rec.name.decode(), "producer": pid,
+                "bytes": (rec.metrics or (0.0,))[0]}
+            state["total"] = max(state["total"], total)
+            tmp = path + f".tmp.{threading.get_ident()}"
+            with open(tmp, "w") as fh:
+                json.dump(state, fh)
+            os.replace(tmp, path)
+            if state["total"] and len(state["shards"]) == state["total"]:
+                with open(self.manifest_path(step) + ".tmp", "w") as fh:
+                    json.dump({"step": step, "complete": True,
+                               "shards": state["shards"]}, fh)
+                os.replace(self.manifest_path(step) + ".tmp",
+                           self.manifest_path(step))
+                self.committed.add(step)
+
+    def latest_committed(self) -> Optional[int]:
+        steps = [int(f.split("-")[1].split(".")[0])
+                 for f in os.listdir(self.dir) if f.endswith(".manifest.json")]
+        return max(steps) if steps else None
+
+
+class StragglerDetector(_GroupWorker):
+    """EWMA of per-host step durations; a host whose EWMA exceeds
+    ``threshold`` x the fleet median is flagged."""
+
+    def __init__(self, proxy, group: str = "health", alpha: float = 0.3,
+                 threshold: float = 1.5):
+        super().__init__(proxy, group)
+        self.alpha = alpha
+        self.threshold = threshold
+        self.ewma: Dict[int, float] = {}
+        self.flagged: Set[int] = set()
+
+    def handle(self, pid: str, rec: R.ChangelogRecord) -> None:
+        if rec.type not in (R.CL_HEARTBEAT, R.CL_STEP_COMMIT):
+            return
+        host = rec.tfid.oid
+        dt = (rec.metrics or (0.0,))[-2] if rec.type == R.CL_STEP_COMMIT \
+            else (rec.metrics or (0.0,))[0]
+        prev = self.ewma.get(host)
+        self.ewma[host] = dt if prev is None else \
+            self.alpha * dt + (1 - self.alpha) * prev
+        self._reflag()
+
+    def _reflag(self) -> None:
+        if len(self.ewma) < 2:
+            return
+        vals = sorted(self.ewma.values())
+        median = vals[len(vals) // 2]
+        if median <= 0:
+            return
+        self.flagged = {h for h, v in self.ewma.items()
+                        if v > self.threshold * median}
+
+
+class ElasticController(_GroupWorker):
+    """Tracks fleet membership from ELASTIC_JOIN/LEAVE records and
+    proposes the largest usable mesh for the next restart window."""
+
+    def __init__(self, proxy, group: str = "elastic",
+                 chips_per_host: int = 4):
+        super().__init__(proxy, group)
+        self.chips_per_host = chips_per_host
+        self.members: Set[int] = set()
+        self.generation = 0
+
+    def handle(self, pid: str, rec: R.ChangelogRecord) -> None:
+        if rec.type == R.CL_ELASTIC_JOIN:
+            self.members.add(rec.tfid.oid)
+            self.generation += 1
+        elif rec.type == R.CL_ELASTIC_LEAVE:
+            self.members.discard(rec.tfid.oid)
+            self.generation += 1
+
+    def plan(self) -> Dict[str, int]:
+        """Largest power-of-two device count usable as (data x model)."""
+        chips = len(self.members) * self.chips_per_host
+        usable = 1 << max(0, int(math.log2(chips))) if chips else 0
+        data = 1 << (int(math.log2(usable)) // 2) if usable else 0
+        return {"chips": chips, "usable": usable,
+                "data": data, "model": usable // data if data else 0,
+                "generation": self.generation}
+
+
+class CacheInvalidator(_GroupWorker):
+    """Ephemeral consumer invalidating a local cache on EVICT records —
+    the Ganesha/pNFS metadata-cache analogue (§IV-C-1).  In the serving
+    runtime this is the per-replica KV/page cache."""
+
+    def __init__(self, proxy, cache: Dict[Tuple[int, int], object],
+                 mode: str = "ephemeral"):
+        self.reader = LocalReader(proxy, None if mode == "ephemeral" else "evict",
+                                  flags=R.CLF_SUPPORTED, mode=mode)
+        self.cache = cache
+        self.invalidated = 0
+
+    def poll(self, max_records: int = 256) -> int:
+        batch = self.reader.fetch(max_records)
+        for pid, rec in batch:
+            if rec.type == R.CL_EVICT:
+                if self.cache.pop((rec.tfid.oid, rec.tfid.ver), None) is not None:
+                    self.invalidated += 1
+            if self.reader.mode == "persistent":
+                self.reader.ack(pid, rec.index)
+        return len(batch)
+
+    def close(self) -> None:
+        self.reader.close()

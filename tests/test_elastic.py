@@ -1,0 +1,44 @@
+"""Elastic + straggler response policies."""
+
+from repro.core import records as R
+from repro.core.proxy import LcapProxy
+from repro.core.reader import LocalReader
+from repro.runtime.straggler import StragglerMitigator, rebalance_shards
+from repro.track import ActivityTracker, StragglerDetector
+
+
+def test_rebalance_even_without_ewma():
+    out = rebalance_shards(8, [0, 1, 2, 3], {})
+    assert sorted(sum(out.values(), [])) == list(range(8))
+    assert all(len(v) == 2 for v in out.values())
+
+
+def test_rebalance_shifts_away_from_straggler():
+    ewma = {0: 0.1, 1: 0.1, 2: 0.4, 3: 0.1}     # host 2 is 4x slower
+    out = rebalance_shards(16, [0, 1, 2, 3], ewma)
+    assert sorted(sum(out.values(), [])) == list(range(16))
+    assert len(out[2]) < len(out[0])
+    assert len(out[2]) >= 1                      # not starved entirely
+
+
+def test_mitigator_emits_straggler_records():
+    trackers = [ActivityTracker(run_id=1, host_id=h) for h in range(3)]
+    proxy = LcapProxy({t.llog.producer_id: t.llog for t in trackers})
+    det = StragglerDetector(proxy)
+    audit = LocalReader(proxy, "audit")
+    mit = StragglerMitigator(det, n_shards=6, tracker=trackers[0])
+
+    for step in range(8):
+        for h, t in enumerate(trackers):
+            t.heartbeat(step, step_time_s=0.5 if h == 1 else 0.1)
+    proxy.pump()
+    det.poll()
+    assert det.flagged == {1}
+    new = mit.maybe_rebalance([0, 1, 2], step=8)
+    assert new is not None and len(new[1]) < len(new[0])
+    # decision visible on the changelog stream
+    proxy.pump()
+    types = [rec.type for _, rec in audit.fetch(100)]
+    assert R.CL_STRAGGLER in types
+    # unchanged verdict -> no repeated rebalance
+    assert mit.maybe_rebalance([0, 1, 2], step=9) is None

@@ -1,0 +1,122 @@
+"""Journal semantics (paper §II): registration arms logging, masks,
+index/prev chaining, per-reader acks, trim at the collective watermark,
+persistence across reopen."""
+
+import pytest
+
+from repro.core import records as R
+from repro.core.llog import Llog
+
+
+def rec(t=R.CL_CREATE, oid=1, name=b"f"):
+    return R.ChangelogRecord(type=t, tfid=R.Fid(1, oid, 0),
+                             pfid=R.Fid(1, 0, 0), name=name)
+
+
+def test_not_logged_without_reader():
+    log = Llog("mdt0")
+    assert log.log(rec()) is None
+    assert log.last_index == 0
+
+
+def test_registration_arms_logging_and_indices_increase():
+    log = Llog("mdt0")
+    log.register_reader()
+    idx = [log.log(rec(oid=i)) for i in range(5)]
+    assert idx == [1, 2, 3, 4, 5]
+
+
+def test_mask_selects_operations():
+    log = Llog("mdt0", mask={R.CL_CREATE})
+    log.register_reader()
+    assert log.log(rec(R.CL_CREATE)) == 1
+    assert log.log(rec(R.CL_UNLINK)) is None
+    assert log.log(rec(R.CL_CREATE)) == 2
+
+
+def test_prev_chains_same_target():
+    log = Llog("mdt0")
+    log.register_reader()
+    log.log(rec(oid=1))          # idx 1
+    log.log(rec(oid=2))          # idx 2
+    log.log(rec(oid=1))          # idx 3, prev=1
+    bufs = log.read(1, 10)
+    parsed = [R.unpack(b) for b in bufs]
+    assert parsed[2].prev == 1 and parsed[1].prev == 0
+
+
+def test_read_from_index_and_batching():
+    log = Llog("mdt0")
+    log.register_reader()
+    for i in range(10):
+        log.log(rec(oid=i))
+    assert len(log.read(1, 4)) == 4
+    assert [R.unpack(b).index for b in log.read(7, 100)] == [7, 8, 9, 10]
+    assert log.read(11) == []
+
+
+def test_trim_requires_all_readers():
+    """Records are kept until acknowledged by ALL registered readers."""
+    log = Llog("mdt0")
+    r1 = log.register_reader()
+    r2 = log.register_reader()
+    for i in range(6):
+        log.log(rec(oid=i))
+    log.ack(r1, 4)
+    assert log.first_index == 1          # r2 still owes acks
+    log.ack(r2, 2)
+    assert log.first_index == 3          # min(4, 2) = 2 trimmed
+    log.ack(r2, 6)
+    assert log.first_index == 5
+    log.ack(r1, 6)
+    assert log.first_index == 7 and log.read(1) == []
+
+
+def test_deregister_releases_horizon():
+    log = Llog("mdt0")
+    r1 = log.register_reader()
+    r2 = log.register_reader()
+    for i in range(4):
+        log.log(rec(oid=i))
+    log.ack(r1, 4)
+    assert log.first_index == 1
+    log.deregister_reader(r2)            # slow reader goes away
+    assert log.first_index == 5
+
+
+def test_new_reader_owes_only_future_records():
+    log = Llog("mdt0")
+    r1 = log.register_reader()
+    log.log(rec(oid=1))
+    log.ack(r1, 1)
+    r2 = log.register_reader()
+    log.log(rec(oid=2))
+    log.ack(r1, 2)
+    assert log.first_index == 1 + 1      # idx1 trimmed; idx2 awaits r2
+    log.ack(r2, 2)
+    assert log.first_index == 3
+
+
+def test_persistence_roundtrip(tmp_path):
+    p = str(tmp_path / "mdt0.llog")
+    log = Llog("mdt0", path=p)
+    rid = log.register_reader()
+    for i in range(5):
+        log.log(rec(oid=i, name=f"f{i}".encode()))
+    log.ack(rid, 2)
+    log.close()
+
+    log2 = Llog("mdt0", path=p)
+    assert log2.first_index == 3 and log2.last_index == 5
+    assert [R.unpack(b).name for b in log2.read(3, 10)] == [b"f2", b"f3", b"f4"]
+    # the reader registry survived; new records continue the index space
+    assert log2.log(rec(oid=99)) == 6
+    log2.ack(rid, 6)
+    assert log2.first_index == 7
+
+
+def test_duplicate_reader_rejected():
+    log = Llog("mdt0")
+    log.register_reader("cl1")
+    with pytest.raises(ValueError):
+        log.register_reader("cl1")

@@ -1,0 +1,133 @@
+"""Stream-processing modules (paper §III-A) + ack interaction: records
+dropped by modules must not block the upstream trim."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import records as R
+from repro.core.ack import AckTracker
+from repro.core.llog import Llog
+from repro.core.modules import (CancelCompensating, CoalesceHeartbeats,
+                                ReorderByTarget, TypeFilter)
+from repro.core.proxy import LcapProxy
+from repro.core.reader import LocalReader
+
+
+def rec(t=R.CL_CREATE, oid=1, ver=0, idx=0, name=b"f"):
+    return R.ChangelogRecord(type=t, index=idx, tfid=R.Fid(1, oid, ver),
+                             pfid=R.Fid(1, 0, 0), name=name)
+
+
+def test_cancel_creat_unlink_pair():
+    batch = [rec(R.CL_CREATE, oid=7, idx=1), rec(R.CL_SETATTR, oid=8, idx=2),
+             rec(R.CL_UNLINK, oid=7, idx=3)]
+    out = CancelCompensating()(batch)
+    assert [r.index for r in out] == [2]
+
+
+def test_cancel_only_matched_pairs():
+    batch = [rec(R.CL_UNLINK, oid=7, idx=1),   # unmatched unlink stays
+             rec(R.CL_CREATE, oid=7, idx=2)]   # later create stays
+    out = CancelCompensating()(batch)
+    assert [r.index for r in out] == [1, 2]
+
+
+def test_ckpt_write_superseded():
+    batch = [rec(R.CL_CKPT_WRITE, oid=3, ver=1, idx=1),
+             rec(R.CL_CKPT_WRITE, oid=4, ver=1, idx=2),
+             rec(R.CL_CKPT_WRITE, oid=3, ver=2, idx=3)]
+    out = CancelCompensating()(batch)
+    assert [r.index for r in out] == [2, 3]   # older write of shard 3 gone
+
+
+def test_reorder_by_target_groups_objects():
+    batch = [rec(oid=2, idx=1), rec(oid=1, idx=2), rec(oid=2, idx=3)]
+    out = ReorderByTarget()(batch)
+    assert [(r.tfid.oid, r.index) for r in out] == [(1, 2), (2, 1), (2, 3)]
+
+
+def test_type_filter():
+    batch = [rec(R.CL_CREATE, idx=1), rec(R.CL_HEARTBEAT, idx=2)]
+    assert [r.index for r in TypeFilter({R.CL_HEARTBEAT})(batch)] == [2]
+
+
+def test_coalesce_heartbeats_keeps_latest_per_host():
+    batch = [rec(R.CL_HEARTBEAT, oid=1, idx=1), rec(R.CL_CREATE, oid=9, idx=2),
+             rec(R.CL_HEARTBEAT, oid=1, idx=3), rec(R.CL_HEARTBEAT, oid=2, idx=4)]
+    out = CoalesceHeartbeats()(batch)
+    assert [r.index for r in out] == [2, 3, 4]
+
+
+def test_dropped_records_do_not_block_upstream_ack():
+    """Module-dropped records never reach consumers yet must still be
+    trimmed upstream once surrounding records are acked."""
+    log = Llog("mdt0")
+    proxy = LcapProxy({"mdt0": log}, modules=[CancelCompensating()])
+    r = LocalReader(proxy, "g")
+    log.log(rec(R.CL_CREATE, oid=7))      # idx1 \ cancelled pair
+    log.log(rec(R.CL_UNLINK, oid=7))      # idx2 /
+    log.log(rec(R.CL_SETATTR, oid=8))     # idx3 delivered
+    proxy.pump()
+    got = r.fetch()
+    assert [rr.index for _, rr in got] == [3]
+    r.ack("mdt0", 3)
+    assert log.first_index == 4           # 1,2 trimmed though never seen
+
+
+def test_all_records_dropped_still_trims():
+    log = Llog("mdt0")
+    proxy = LcapProxy({"mdt0": log}, modules=[TypeFilter({R.CL_RENAME})])
+    LocalReader(proxy, "g")
+    for i in range(5):
+        log.log(rec(R.CL_CREATE, oid=i))
+    proxy.pump()
+    proxy.flush_upstream()
+    assert log.first_index == 6
+
+
+def test_reorder_then_ack_out_of_order_watermark():
+    log = Llog("mdt0")
+    proxy = LcapProxy({"mdt0": log}, modules=[ReorderByTarget()])
+    r = LocalReader(proxy, "g")
+    log.log(rec(oid=9))                   # idx1 (sorts last)
+    log.log(rec(oid=1))                   # idx2 (sorts first)
+    proxy.pump()
+    got = r.fetch()
+    assert [rr.index for _, rr in got] == [2, 1]
+    r.ack("mdt0", 2)
+    assert log.first_index == 1           # idx1 still outstanding
+    r.ack("mdt0", 1)
+    assert log.first_index == 3
+
+
+# --------------------------------------------------------------- AckTracker
+@settings(max_examples=200, deadline=None)
+@given(st.permutations(list(range(1, 12))), st.sets(st.integers(1, 11)))
+def test_acktracker_watermark_invariant(ack_order, delivered):
+    """Property: watermark == largest W with every delivered idx <= W
+    acked, regardless of delivery/ack order."""
+    tr = AckTracker()
+    for i in sorted(delivered):
+        tr.deliver(i)
+    acked = set()
+    for idx in ack_order:
+        if idx not in delivered:
+            continue
+        tr.ack(idx)
+        acked.add(idx)
+        expect = 0
+        for w in sorted(delivered):
+            if w in acked:
+                expect = w
+            else:
+                break
+        assert tr.watermark == expect
+
+
+def test_acktracker_ack_through():
+    tr = AckTracker()
+    for i in (1, 2, 3, 5, 8):
+        tr.deliver(i)
+    assert tr.ack_through(5) == 5
+    assert tr.in_flight == 1
+    assert tr.ack(8) == 8

@@ -1,0 +1,159 @@
+"""Record format: pack/unpack round-trip, offsets, remapping (paper §IV-A)."""
+
+import struct
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import records as R
+
+
+def mk(name=b"file0", **kw):
+    return R.ChangelogRecord(type=R.CL_CREATE, index=7, prev=3, time=123456789,
+                             tfid=R.Fid(1, 2, 3), pfid=R.Fid(4, 5, 6),
+                             name=name, **kw)
+
+
+def test_header_is_64_bytes():
+    assert R.HDR_SIZE == 64
+    assert len(R.pack(R.ChangelogRecord())) == 64
+
+
+def test_roundtrip_minimal():
+    rec = mk()
+    out = R.unpack(R.pack(rec))
+    assert out.type == R.CL_CREATE and out.index == 7 and out.prev == 3
+    assert out.tfid == R.Fid(1, 2, 3) and out.pfid == R.Fid(4, 5, 6)
+    assert out.name == b"file0" and out.flags == 0
+
+
+def test_roundtrip_all_extensions():
+    rec = mk(sfid=R.Fid(9, 9, 9), spfid=R.Fid(8, 8, 8), sname=b"oldname",
+             jobid=b"train-step-17", shard=(1, 12, 3, 4),
+             metrics=(1.5, -2.25), xattr={"k": "v", "n": 3})
+    out = R.unpack(R.pack(rec))
+    assert out.sfid == R.Fid(9, 9, 9) and out.spfid == R.Fid(8, 8, 8)
+    assert out.sname == b"oldname"
+    assert out.jobid == b"train-step-17"
+    assert out.shard == (1, 12, 3, 4)
+    assert out.metrics == (1.5, -2.25)
+    assert out.xattr == {"k": "v", "n": 3}
+    assert out.flags == R.CLF_SUPPORTED
+
+
+def test_offsets_skip_absent_fields():
+    """No disk/bandwidth is spent on fields a record does not carry."""
+    small = R.pack(mk())
+    with_jobid = R.pack(mk(jobid=b"j"))
+    assert len(with_jobid) == len(small) + 32
+    # jobid lives immediately after the header when CLF_RENAME is absent
+    assert R.rec_offset(R.CLF_JOBID, R.CLF_JOBID) == R.HDR_SIZE
+    # ...and after the two extra fids when it is present
+    assert R.rec_offset(R.CLF_RENAME | R.CLF_JOBID, R.CLF_JOBID) == R.HDR_SIZE + 32
+
+
+def test_remap_strip_fields():
+    """Remote remap: newer server -> older client drops unknown fields."""
+    buf = R.pack(mk(jobid=b"job42", metrics=(3.0,)))
+    old = R.remap(buf, R.CLF_V20)
+    rec = R.unpack(old)
+    assert rec.jobid is None and rec.metrics is None
+    assert rec.name == b"file0" and rec.index == 7
+    assert len(old) < len(buf)
+
+
+def test_remap_add_fields_zero_filled():
+    """Local remap: older server -> newer client zero-fills."""
+    buf = R.pack(mk())
+    new = R.remap(buf, R.CLF_JOBID | R.CLF_SHARD)
+    rec = R.unpack(new)
+    assert rec.jobid == b""            # zero-filled, stripped of NULs
+    assert rec.shard == (0, 0, 0, 0)
+    assert rec.name == b"file0"
+
+
+def test_remap_rename_tail_handling():
+    rec = mk(sfid=R.Fid(1, 1, 1), spfid=R.Fid(2, 2, 2), sname=b"src")
+    buf = R.pack(rec)
+    # strip rename: sname tail must go away with the fids
+    stripped = R.unpack(R.remap(buf, 0))
+    assert stripped.sfid is None and stripped.sname == b""
+    assert stripped.name == b"file0"
+    # add rename to a record without it: NUL + empty sname
+    plain = R.pack(mk())
+    added = R.unpack(R.remap(plain, R.CLF_RENAME))
+    assert added.sfid == R.Fid(0, 0, 0) and added.sname == b""
+
+
+def test_remap_identity_is_noop():
+    buf = R.pack(mk(jobid=b"x"))
+    assert R.remap(buf, R.CLF_JOBID) is buf
+
+
+def test_v27_compat_mask():
+    """The v2.7 struct (fig. 3) == rename fids + jobid."""
+    rec = mk(sfid=R.Fid(0, 0, 0), spfid=R.Fid(0, 0, 0), jobid=b"qsub-1",
+             metrics=(9.0,))
+    v27 = R.unpack(R.remap(R.pack(rec), R.CLF_V27))
+    assert v27.jobid == b"qsub-1" and v27.metrics is None
+
+
+names = st.binary(min_size=0, max_size=64).filter(lambda b: b"\0" not in b)
+fids = st.builds(R.Fid, st.integers(0, 2**64 - 1), st.integers(0, 2**32 - 1),
+                 st.integers(0, 2**32 - 1))
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    rtype=st.sampled_from(sorted(R.TYPE_NAMES)),
+    index=st.integers(0, 2**63), tfid=fids, pfid=fids, name=names,
+    jobid=st.none() | st.binary(max_size=32),
+    shard=st.none() | st.tuples(*[st.integers(0, 2**16 - 1)] * 4),
+    metrics=st.none() | st.tuples(st.floats(allow_nan=False)),
+    rename=st.booleans(), sname=names,
+)
+def test_property_roundtrip(rtype, index, tfid, pfid, name, jobid, shard,
+                            metrics, rename, sname):
+    rec = R.ChangelogRecord(type=rtype, index=index, tfid=tfid, pfid=pfid,
+                            name=name, jobid=jobid, shard=shard,
+                            metrics=metrics)
+    if rename:
+        rec.sfid, rec.spfid, rec.sname = R.Fid(1, 2, 3), R.Fid(4, 5, 6), sname
+    out = R.unpack(R.pack(rec))
+    assert out.name == name and out.type == rtype and out.index == index
+    assert out.jobid == (jobid.rstrip(b"\0") if jobid is not None else None)
+    assert out.shard == shard
+    assert out.metrics == metrics
+    if rename:
+        assert out.sname == sname
+
+
+@settings(max_examples=200, deadline=None)
+@given(src=st.integers(0, R.CLF_SUPPORTED), dst=st.integers(0, R.CLF_SUPPORTED))
+def test_property_remap_masks(src, dst):
+    """remap is total over all (src, dst) flag-mask pairs and the result
+    parses with exactly the dst mask."""
+    rec = mk()
+    if src & R.CLF_RENAME:
+        rec.sfid, rec.spfid, rec.sname = R.Fid(1, 1, 1), R.Fid(2, 2, 2), b"s"
+    if src & R.CLF_JOBID:
+        rec.jobid = b"J"
+    if src & R.CLF_SHARD:
+        rec.shard = (1, 2, 3, 4)
+    if src & R.CLF_METRICS:
+        rec.metrics = (1.0, 2.0)
+    if src & R.CLF_XATTR:
+        rec.xattr = {"a": 1}
+    buf = R.pack(rec)
+    assert R.packed_flags(buf) == src
+    out = R.remap(buf, dst)
+    assert R.packed_flags(out) == dst
+    parsed = R.unpack(out)
+    assert parsed.name == rec.name
+    if src & dst & R.CLF_JOBID:
+        assert parsed.jobid == b"J"
+    if src & dst & R.CLF_METRICS:
+        assert parsed.metrics == (1.0, 2.0)
+    # double remap to the same mask is idempotent
+    assert R.remap(out, dst) == R.remap(R.remap(out, dst), dst)

@@ -1,0 +1,143 @@
+"""Framework integration of LCAP (paper usage examples mapped to
+training): shared-DB metrics group, checkpoint commit protocol,
+straggler detection, elastic membership, cache invalidation, index
+bootstrap."""
+
+import os
+
+from repro.core import records as R
+from repro.core.llog import Llog
+from repro.core.proxy import LcapProxy
+from repro.track import (ActivityTracker, CacheInvalidator,
+                         CheckpointCommitter, ElasticController, MetricsDB,
+                         StragglerDetector, synthesize_index_stream)
+
+
+def mk_world(n_hosts=4):
+    trackers = [ActivityTracker(run_id=1, host_id=h, jobid=f"run-1",
+                                shard=(0, h, h // 2, h % 2))
+                for h in range(n_hosts)]
+    proxy = LcapProxy({t.llog.producer_id: t.llog for t in trackers})
+    return trackers, proxy
+
+
+def pump_all(proxy, workers, rounds=10):
+    for _ in range(rounds):
+        proxy.pump()
+        moved = sum(w.poll() for w in workers)
+        proxy.flush_upstream()
+        if not moved:
+            break
+
+
+def test_metrics_db_shared_across_group(tmp_path):
+    """N MetricsDB instances of one group replicate the stream into one
+    shared database — the Robinhood-distributed configuration."""
+    trackers, proxy = mk_world(4)
+    db = str(tmp_path / "metrics.sqlite")
+    workers = [MetricsDB(proxy, db) for _ in range(3)]
+    for step in range(5):
+        for t in trackers:
+            t.step_commit(step, loss=1.0 / (step + 1), step_time_s=0.1,
+                          tokens=1024)
+    pump_all(proxy, workers)
+    rows = workers[0].query("SELECT COUNT(*) FROM events WHERE type=?",
+                            (R.CL_STEP_COMMIT,))
+    assert rows[0][0] == 20
+    # every instance processed a share (load-balanced)
+    per = [w.query("SELECT COUNT(*) FROM events")[0][0] for w in workers]
+    assert per[0] == 20                       # shared DB: all rows visible
+    # and the journals were trimmed (collective ack made it upstream)
+    assert all(t.llog.first_index == t.llog.last_index + 1 for t in trackers)
+    for w in workers:
+        w.close()
+
+
+def test_checkpoint_commit_protocol(tmp_path):
+    """CKPT_WRITE records from all hosts -> committer group publishes the
+    manifest exactly when every shard landed."""
+    trackers, proxy = mk_world(4)
+    committers = [CheckpointCommitter(proxy, str(tmp_path / "manifests"))
+                  for _ in range(2)]
+    step = 7
+    for shard, t in enumerate(trackers[:-1]):
+        t.ckpt_write(step, shard_id=shard, nbytes=1 << 20,
+                     path=f"/ckpt/s{shard}", total_shards=4)
+    pump_all(proxy, committers)
+    assert committers[0].latest_committed() is None   # one shard missing
+    trackers[-1].ckpt_write(step, shard_id=3, nbytes=1 << 20,
+                            path="/ckpt/s3", total_shards=4)
+    pump_all(proxy, committers)
+    assert committers[0].latest_committed() == step
+    assert os.path.exists(committers[0].manifest_path(step))
+
+
+def test_straggler_detection():
+    trackers, proxy = mk_world(4)
+    det = StragglerDetector(proxy)
+    for step in range(10):
+        for h, t in enumerate(trackers):
+            t.heartbeat(step, step_time_s=0.1 if h != 2 else 0.5)
+    pump_all(proxy, [det])
+    assert det.flagged == {2}
+
+
+def test_elastic_membership_plan():
+    trackers, proxy = mk_world(4)
+    ctl = ElasticController(proxy, chips_per_host=4)
+    for t in trackers:
+        t.elastic(joined=True, n_hosts=4, step=0)
+    pump_all(proxy, [ctl])
+    assert ctl.members == {0, 1, 2, 3}
+    assert ctl.plan()["usable"] == 16
+    trackers[1].elastic(joined=False, n_hosts=3, step=5)
+    pump_all(proxy, [ctl])
+    assert ctl.members == {0, 2, 3}
+    assert ctl.plan()["usable"] == 8          # 12 chips -> 8 usable
+
+
+def test_cache_invalidation_ephemeral():
+    """Ganesha-style: an ephemeral reader invalidates local cache entries
+    on EVICT records, without ever blocking the journal trim."""
+    trackers, proxy = mk_world(2)
+    from repro.core.reader import LocalReader
+    anchor = LocalReader(proxy, "metrics")    # persistent group
+    cache = {(5, 1): "page-a", (6, 1): "page-b"}
+    inv = CacheInvalidator(proxy, cache)
+    trackers[0].evict(5, 1)
+    proxy.pump()
+    inv.poll()
+    assert (5, 1) not in cache and (6, 1) in cache
+    assert inv.invalidated == 1
+    for pid, rec in anchor.fetch():
+        anchor.ack(pid, rec.index)
+    assert trackers[0].llog.first_index == trackers[0].llog.last_index + 1
+
+
+def test_bootstrap_index_traversal(tmp_path):
+    """§IV-C-2: a synthetic changelog stream from the object index is
+    consumed collaboratively to populate a fresh metrics DB."""
+    index = [(i, 1, f"obj{i}", 4096 * i) for i in range(100)]
+    log = synthesize_index_stream(index)
+    proxy = LcapProxy({"index0": log})
+    db = str(tmp_path / "boot.sqlite")
+    workers = [MetricsDB(proxy, db) for _ in range(4)]
+    pump_all(proxy, workers)
+    assert workers[0].query("SELECT COUNT(*) FROM events")[0][0] == 100
+    # collaborative: every instance handled part of the traversal
+    handled = [proxy.consumers[w.reader.cid].delivered for w in workers]
+    assert all(h > 0 for h in handled) and sum(handled) == 100
+    for w in workers:
+        w.close()
+
+
+def test_data_consume_records_support_replay():
+    trackers, proxy = mk_world(2)
+    from repro.core.reader import LocalReader
+    r = LocalReader(proxy, "replay")
+    trackers[0].data_consume(step=3, shard_id=11, lo=0, hi=512)
+    trackers[1].data_consume(step=3, shard_id=12, lo=512, hi=1024)
+    proxy.pump()
+    got = r.fetch()
+    ranges = sorted((rec.xattr["lo"], rec.xattr["hi"]) for _, rec in got)
+    assert ranges == [(0, 512), (512, 1024)]

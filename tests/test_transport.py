@@ -1,0 +1,112 @@
+"""Client/server operation over TCP (paper fig. 1): remote readers,
+load-balanced groups over the network, crash-disconnect redelivery."""
+
+import time
+
+import pytest
+
+from repro.core import records as R
+from repro.core.llog import Llog
+from repro.core.proxy import LcapProxy
+from repro.core.reader import RemoteReader
+from repro.core.server import LcapService
+
+
+def rec(oid, name=b"f"):
+    return R.ChangelogRecord(type=R.CL_CREATE, tfid=R.Fid(1, oid, 0),
+                             pfid=R.Fid(1, 0, 0), name=name,
+                             jobid=b"job-%d" % oid)
+
+
+@pytest.fixture()
+def service():
+    logs = {"mdt0": Llog("mdt0"), "mdt1": Llog("mdt1")}
+    proxy = LcapProxy(logs)
+    svc = LcapService(proxy, poll_interval=0.001).start()
+    yield svc, logs
+    svc.stop()
+
+
+def fetch_until(reader, want, timeout=5.0):
+    got = []
+    deadline = time.time() + timeout
+    while len(got) < want and time.time() < deadline:
+        batch = reader.fetch()
+        if batch:
+            got.extend(batch)
+        else:
+            time.sleep(0.002)
+    return got
+
+
+def test_remote_roundtrip_and_ack(service):
+    svc, logs = service
+    r = RemoteReader(svc.address, "g")
+    for i in range(10):
+        logs["mdt0"].log(rec(i))
+        logs["mdt1"].log(rec(i))
+    got = fetch_until(r, 20)
+    assert len(got) == 20
+    assert {pid for pid, _ in got} == {"mdt0", "mdt1"}
+    for pid, record in got:
+        r.ack(pid, record.index)
+    deadline = time.time() + 5
+    while logs["mdt0"].first_index != 11 and time.time() < deadline:
+        time.sleep(0.005)
+    assert logs["mdt0"].first_index == 11
+    assert logs["mdt1"].first_index == 11
+    r.close()
+
+
+def test_remote_group_load_balancing(service):
+    svc, logs = service
+    rs = [RemoteReader(svc.address, "g") for _ in range(3)]
+    for i in range(60):
+        logs["mdt0"].log(rec(i))
+    per = [fetch_until(r, 60 // 3 - 5) for r in rs]
+    total = sum(len(p) for p in per)
+    # give stragglers one more chance to drain the remainder
+    deadline = time.time() + 5
+    while total < 60 and time.time() < deadline:
+        for r, p in zip(rs, per):
+            p.extend(r.fetch())
+        total = sum(len(p) for p in per)
+    assert total == 60
+    assert all(len(p) > 0 for p in per)
+    for r in rs:
+        r.close()
+
+
+def test_remote_flags_strip(service):
+    svc, logs = service
+    old = RemoteReader(svc.address, "old", flags=0)
+    logs["mdt0"].log(rec(1))
+    (pid, record), = fetch_until(old, 1)
+    assert record.jobid is None           # stripped remotely
+    old.close()
+
+
+def test_crash_disconnect_triggers_redelivery(service):
+    svc, logs = service
+    a = RemoteReader(svc.address, "g")
+    b = RemoteReader(svc.address, "g")
+    for i in range(30):
+        logs["mdt0"].log(rec(i))
+    got_a = fetch_until(a, 10)
+    assert got_a
+    a.close(failed=True)                  # socket drop, no deregister
+    seen = {r.index for _, r in fetch_until(b, 30, timeout=10)}
+    deadline = time.time() + 10
+    while len(seen) < 30 and time.time() < deadline:
+        seen |= {r.index for _, r in b.fetch()}
+        time.sleep(0.005)
+    assert seen == set(range(1, 31))
+    b.close()
+
+
+def test_remote_error_reporting(service):
+    svc, _ = service
+    r = RemoteReader(svc.address, "g")
+    reply = r.rpc.call({"op": "ack", "cid": "nope", "pid": "mdt0", "index": 1})
+    assert "err" in reply
+    r.close()
