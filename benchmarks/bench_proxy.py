@@ -1,0 +1,197 @@
+"""End-to-end LCAP proxy throughput: ingest -> dispatch -> ack.
+
+Measures records/sec through the batch-native pipeline (RecordBatch
+views end to end, plan-cached remap, batch acks) against a faithful
+re-implementation of the seed's per-record path (unpack every record at
+ingest, repack it into the buffer, unpack again at dispatch to read one
+u64, remap per consumer, decode at the reader, ack record by record) —
+the architecture this refactor replaced.
+
+Run:  PYTHONPATH=src python benchmarks/bench_proxy.py
+Writes BENCH_proxy.json (consumed by CI as an artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from collections import deque
+from typing import Dict
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import records as R                       # noqa: E402
+from repro.core.ack import AckTracker                     # noqa: E402
+from repro.core.llog import Llog                          # noqa: E402
+from repro.core.proxy import LcapProxy                    # noqa: E402
+from repro.core.reader import LocalReader                 # noqa: E402
+
+# Consumers ask for exactly what the producers write: the common case a
+# deployment converges to, and the one the proxy's remap fast path serves.
+FLAGS = R.CLF_JOBID | R.CLF_SHARD
+
+
+def fill_logs(n_producers: int, total_records: int) -> Dict[str, Llog]:
+    per = total_records // n_producers
+    logs = {}
+    for p in range(n_producers):
+        log = Llog(f"mdt{p}")
+        logs[f"mdt{p}"] = log
+    return logs, per
+
+
+def feed(logs: Dict[str, Llog], per: int) -> int:
+    n = 0
+    for p, log in enumerate(logs.values()):
+        for i in range(per):
+            log.log(R.ChangelogRecord(
+                type=R.CL_CREATE, tfid=R.Fid(1, i, 0), pfid=R.Fid(1, 0, 0),
+                name=b"f%08d" % i, jobid=b"bench-job", shard=(0, p, 0, 0)))
+            n += 1
+    return n
+
+
+# --------------------------------------------------------------- batch path
+def run_batch(n_producers: int, total_records: int) -> dict:
+    logs, per = fill_logs(n_producers, total_records)
+    proxy = LcapProxy(logs)
+    reader = LocalReader(proxy, "bench", flags=FLAGS)
+    total = feed(logs, per)
+
+    t0 = time.perf_counter()
+    done = 0
+    while done < total:
+        proxy.pump()
+        moved = 0
+        for pid, batch in reader.fetch_batches(4096):
+            reader.ack_batch(pid, batch.indices())
+            moved += len(batch)
+        if not moved:
+            proxy.flush_upstream()
+        done += moved
+    elapsed = time.perf_counter() - t0
+
+    assert all(log.first_index == log.last_index + 1 for log in logs.values())
+    segments_dropped = sum(log.stats["segments_dropped"]
+                           for log in logs.values())
+    return {"records": total, "seconds": elapsed,
+            "records_per_sec": total / elapsed,
+            "segments_dropped": segments_dropped}
+
+
+# ---------------------------------------------------------- seed-style path
+class SeedPipeline:
+    """The seed's per-record hot path, reproduced: every record is fully
+    decoded and re-encoded at ingest, decoded again at dispatch for its
+    index, remapped per consumer, decoded once more at the reader, and
+    acknowledged one index at a time."""
+
+    def __init__(self, logs: Dict[str, Llog], flags: int = FLAGS,
+                 batch_size: int = 1024):
+        self.logs = logs
+        self.flags = flags
+        self.batch_size = batch_size
+        self.rids = {pid: log.register_reader(f"seed-{pid}")
+                     for pid, log in logs.items()}
+        self.cursors = {pid: log.first_index for pid, log in logs.items()}
+        self.trackers = {pid: AckTracker() for pid in logs}
+        self.acked = {pid: 0 for pid in logs}
+        self.buffer = deque()
+        self.outbox = deque()
+        self.in_flight = {}
+
+    def pump(self) -> int:
+        n = 0
+        for pid, log in self.logs.items():
+            while True:
+                batch = log.read(self.cursors[pid], self.batch_size)
+                if not batch:
+                    break
+                recs = [R.unpack(b) for b in batch]      # full decode
+                hi = max(r.index for r in recs)
+                self.cursors[pid] = hi + 1
+                for rec in recs:
+                    self.buffer.append((pid, R.pack(rec)))   # re-encode
+                n += len(recs)
+                if len(recs) < self.batch_size:
+                    break
+        while self.buffer:
+            pid, buf = self.buffer.popleft()
+            idx = R.unpack(buf).index                    # decode for one u64
+            self.trackers[pid].deliver(idx)
+            out = R.remap(buf, R.packed_flags(buf) & self.flags)
+            self.outbox.append((pid, idx, out))
+            self.in_flight[(pid, idx)] = buf
+        return n
+
+    def consume(self, max_records: int = 4096) -> int:
+        n = 0
+        while self.outbox and n < max_records:
+            pid, idx, buf = self.outbox.popleft()
+            rec = R.unpack(R.remap(buf, self.flags))     # reader-side decode
+            assert rec.index == idx
+            self.in_flight.pop((pid, idx), None)
+            w = self.trackers[pid].ack(idx)              # ack per record
+            if w > self.acked[pid]:
+                self.logs[pid].ack(self.rids[pid], w)
+                self.acked[pid] = w
+            n += 1
+        return n
+
+
+def run_seed(n_producers: int, total_records: int) -> dict:
+    logs, per = fill_logs(n_producers, total_records)
+    pipe = SeedPipeline(logs)
+    total = feed(logs, per)
+
+    t0 = time.perf_counter()
+    done = 0
+    while done < total:
+        pipe.pump()
+        done += pipe.consume(1 << 30)
+    elapsed = time.perf_counter() - t0
+
+    assert all(log.first_index == log.last_index + 1 for log in logs.values())
+    return {"records": total, "seconds": elapsed,
+            "records_per_sec": total / elapsed}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--records", type=int, default=64_000,
+                    help="total records per topology")
+    ap.add_argument("--producers", type=int, nargs="+", default=[1, 4, 16])
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_proxy.json"))
+    args = ap.parse_args()
+
+    results = {}
+    for n in args.producers:
+        batch = run_batch(n, args.records)
+        seed = run_seed(n, args.records)
+        speedup = batch["records_per_sec"] / seed["records_per_sec"]
+        results[str(n)] = {"batch": batch, "seed_per_record": seed,
+                           "speedup": round(speedup, 2)}
+        print(f"producers={n:3d}  batch={batch['records_per_sec']:>12,.0f} rec/s  "
+              f"seed={seed['records_per_sec']:>12,.0f} rec/s  "
+              f"speedup={speedup:.2f}x  "
+              f"segments_dropped={batch['segments_dropped']}")
+
+    payload = {
+        "benchmark": "lcap proxy ingest->dispatch->ack",
+        "unit": "records/sec",
+        "flags": "CLF_JOBID|CLF_SHARD",
+        "total_records": args.records,
+        "results": results,
+        "min_speedup": min(r["speedup"] for r in results.values()),
+    }
+    with open(args.out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"wrote {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

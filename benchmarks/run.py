@@ -61,8 +61,9 @@ def bench_llog(n=20000, tmp="/tmp/bench_llog"):
     t_read = _timeit(lambda: log.read(1, n), n)
     print(f"llog_append_mem,{t_append:.2f},{1e6/t_append:.0f}_rec_per_s")
     print(f"llog_read_batch,{t_read:.3f},{1e6/t_read:.0f}_rec_per_s")
-    if os.path.exists(tmp):
-        os.unlink(tmp)
+    import glob
+    for stale in glob.glob(tmp + "*"):
+        os.unlink(stale)
     logd = Llog("mdt1", path=tmp)
     logd.register_reader()
     t_disk = _timeit(lambda: [logd.log(r) for r in recs], n, reps=1)

@@ -14,11 +14,12 @@ from .modules import (CancelCompensating, CoalesceHeartbeats,
                       ReorderByTarget, TypeFilter)
 from .proxy import EPHEMERAL, PERSISTENT, LcapProxy
 from .reader import LocalReader, RemoteReader
+from .records import RecordBatch
 from .server import LcapService
 
 __all__ = [
-    "records", "AckTracker", "Llog", "LcapProxy", "LcapService",
-    "LocalReader", "RemoteReader", "PERSISTENT", "EPHEMERAL",
+    "records", "RecordBatch", "AckTracker", "Llog", "LcapProxy",
+    "LcapService", "LocalReader", "RemoteReader", "PERSISTENT", "EPHEMERAL",
     "CancelCompensating", "CoalesceHeartbeats", "ReorderByTarget",
     "TypeFilter",
 ]

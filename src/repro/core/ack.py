@@ -5,17 +5,23 @@ index W such that every *delivered* index <= W has been acknowledged.
 Acks may arrive out of order (batched/delayed, paper §II) and — because
 proxy modules may reorder or drop records (paper §III-A) — deliveries
 may be out of index order and sparse.
+
+Internals are a min-heap plus membership sets, so ``deliver``/``ack``
+are O(log n) even when a consumer group runs tens of thousands of
+records behind (the sorted-list representation this replaced cost an
+O(n) head pop per ack — quadratic under steady batch consumption).
 """
 
 from __future__ import annotations
 
-from bisect import bisect_right, insort
+import heapq
 from typing import List, Set
 
 
 class AckTracker:
     def __init__(self, start: int = 0):
-        self._outstanding: List[int] = []   # sorted, delivered & un-acked
+        self._heap: List[int] = []          # delivered & un-drained, min-first
+        self._delivered: Set[int] = set()   # membership mirror of _heap
         self._acked: Set[int] = set()       # acked but blocked by a hole
         self._watermark = start
 
@@ -25,20 +31,23 @@ class AckTracker:
 
     @property
     def in_flight(self) -> int:
-        return len(self._outstanding)
+        return len(self._delivered)
 
     def deliver(self, index: int) -> None:
-        if index <= self._watermark or index in self._acked:
+        if index <= self._watermark or index in self._acked \
+                or index in self._delivered:
             return
-        pos = bisect_right(self._outstanding, index)
-        if pos and self._outstanding[pos - 1] == index:
-            return  # redelivery of an in-flight record
-        insort(self._outstanding, index)
+        self._delivered.add(index)
+        heapq.heappush(self._heap, index)
 
     def _drain(self) -> int:
-        while self._outstanding and self._outstanding[0] in self._acked:
-            self._acked.discard(self._outstanding[0])
-            self._watermark = max(self._watermark, self._outstanding.pop(0))
+        heap = self._heap
+        while heap and heap[0] in self._acked:
+            idx = heapq.heappop(heap)
+            self._acked.discard(idx)
+            self._delivered.discard(idx)
+            if idx > self._watermark:
+                self._watermark = idx
         return self._watermark
 
     def ack(self, index: int) -> int:
@@ -47,11 +56,23 @@ class AckTracker:
             self._acked.add(index)
         return self._drain()
 
+    def ack_many(self, indices) -> int:
+        """Acknowledge a batch of delivered indices with one drain pass;
+        returns the watermark."""
+        wm = self._watermark
+        acked = self._acked
+        for index in indices:
+            if index > wm:
+                acked.add(index)
+        return self._drain()
+
     def ack_through(self, index: int) -> int:
         """Cumulative acknowledgement of every delivered index <= index."""
-        pos = bisect_right(self._outstanding, index)
-        head, self._outstanding = self._outstanding[:pos], self._outstanding[pos:]
-        for idx in head:
+        heap = self._heap
+        while heap and heap[0] <= index:
+            idx = heapq.heappop(heap)
             self._acked.discard(idx)
-            self._watermark = max(self._watermark, idx)
+            self._delivered.discard(idx)
+            if idx > self._watermark:
+                self._watermark = idx
         return self._drain()

@@ -13,10 +13,24 @@ training framework).  Semantics follow the paper:
 - Readers poll with an explicit start index (the paper calls out that the
   start command addresses a changelog index on a given MDT, not a reader
   ID — we reproduce that, and LCAP papers over it).
+
+Storage is *segmented* (Lustre's llog is a chain of fixed-size log
+objects — same idea): records append to the active segment, a full
+segment is sealed and a new one started, and trimming drops whole
+sealed segments in O(1) instead of rewriting the journal.  Each segment
+doubles as a ``RecordBatch``: ``read()`` returns a batch view over the
+segment buffer, so the consume path never materializes per-record
+objects.
+
+On-disk layout (when ``path`` is given): one file per segment,
+``<path>.seg.<first-index>``, each a sequence of ``u32 length + packed
+record``; reader positions live in the ``<path>.readers`` sidecar.  A
+truncated final record (crash mid-append) is dropped on load.
 """
 
 from __future__ import annotations
 
+import glob as _glob
 import json
 import os
 import struct
@@ -27,21 +41,58 @@ from . import records as R
 
 _LEN = struct.Struct("<I")
 
+DEFAULT_SEGMENT_RECORDS = 1024
+
+
+class _Segment:
+    """A run of contiguous records [first, first+len) backed by one
+    append-only buffer (and, when persistent, one file)."""
+
+    __slots__ = ("first", "data", "offsets", "lengths", "path")
+
+    def __init__(self, first: int, path: Optional[str] = None):
+        self.first = first
+        self.data = bytearray()
+        self.offsets: List[int] = []
+        self.lengths: List[int] = []
+        self.path = path
+
+    def __len__(self) -> int:
+        return len(self.offsets)
+
+    @property
+    def last(self) -> int:
+        return self.first + len(self.offsets) - 1
+
+    def append(self, buf: bytes) -> None:
+        self.offsets.append(len(self.data))
+        self.lengths.append(len(buf))
+        self.data += buf
+
+    def batch(self, lo: int, count: int) -> R.RecordBatch:
+        """Batch view over records [lo, lo+count) (segment-relative)."""
+        return R.RecordBatch(self.data, self.offsets[lo:lo + count],
+                             self.lengths[lo:lo + count])
+
 
 class Llog:
     def __init__(self, producer_id: str, path: Optional[str] = None,
-                 mask: Optional[Iterable[int]] = None):
+                 mask: Optional[Iterable[int]] = None,
+                 segment_records: int = DEFAULT_SEGMENT_RECORDS):
         self.producer_id = producer_id
         self.path = path
         self.mask = set(mask) if mask is not None else None  # None = all
-        self._recs: List[bytes] = []      # packed records
-        self._first = 1                   # index of _recs[0]
+        self.segment_records = max(1, segment_records)
+        self._segments: List[_Segment] = []
+        self._first = 1                   # logical trim point (first live)
         self._next = 1
         self._prev_by_key: Dict[tuple, int] = {}
         self._readers: Dict[str, int] = {}   # reader_id -> acked-through index
         self._reader_seq = 0
         self._lock = threading.Lock()
-        self._fh = None
+        self._fh = None                   # handle on the active segment file
+        self.stats = {"segments_dropped": 0, "segments_rolled": 0,
+                      "truncated_dropped": 0}
         if path:
             self._load()
 
@@ -49,19 +100,64 @@ class Llog:
     def _sidecar(self) -> str:
         return self.path + ".readers"
 
+    def _seg_path(self, first: int) -> str:
+        return f"{self.path}.seg.{first:016d}"
+
+    def _parse_segment_file(self, path: str, first: int) -> _Segment:
+        seg = _Segment(first, path)
+        with open(path, "rb") as fh:
+            data = fh.read()
+        off = 0
+        while True:
+            if off + 4 > len(data):
+                if off < len(data):
+                    # torn mid-prefix: truncate the stray bytes too, or
+                    # post-recovery appends land after garbage and are
+                    # destroyed by the *next* recovery
+                    self.stats["truncated_dropped"] += 1
+                    with open(path, "r+b") as fh:
+                        fh.truncate(off)
+                break
+            (ln,) = _LEN.unpack_from(data, off)
+            if off + 4 + ln > len(data) or ln < R.HDR_SIZE:
+                # crash mid-append: drop the truncated tail record
+                self.stats["truncated_dropped"] += 1
+                with open(path, "r+b") as fh:
+                    fh.truncate(off)
+                break
+            seg.append(data[off + 4:off + 4 + ln])
+            off += 4 + ln
+        return seg
+
     def _load(self) -> None:
-        if os.path.exists(self.path):
-            with open(self.path, "rb") as fh:
-                data = fh.read()
-            off = 0
-            while off + 4 <= len(data):
-                (ln,) = _LEN.unpack_from(data, off)
-                buf = data[off + 4:off + 4 + ln]
-                off += 4 + ln
-                self._recs.append(buf)
-            if self._recs:
-                self._first = R.unpack(self._recs[0]).index
-                self._next = R.unpack(self._recs[-1]).index + 1
+        seg_files = sorted(_glob.glob(self.path + ".seg.*"))
+        if not seg_files and os.path.exists(self.path):
+            # migrate a legacy single-file journal into segment 0
+            legacy = self._parse_segment_file(self.path, 0)
+            if len(legacy):
+                first_idx = legacy.batch(0, 1).packed_index(0)
+                legacy.first = first_idx
+                legacy.path = self._seg_path(first_idx)
+                with open(legacy.path, "wb") as fh:
+                    off = 0
+                    for o, ln in zip(legacy.offsets, legacy.lengths):
+                        fh.write(_LEN.pack(ln))
+                        fh.write(bytes(legacy.data[o:o + ln]))
+                self._segments.append(legacy)
+            os.remove(self.path)
+        else:
+            for path in seg_files:
+                first = int(path.rsplit(".", 1)[1])
+                seg = self._parse_segment_file(path, first)
+                if len(seg):
+                    self._segments.append(seg)
+                else:
+                    os.remove(path)
+        if self._segments:
+            for seg in self._segments[:-1]:      # only the last stays active
+                seg.data = bytes(seg.data)
+            self._first = self._segments[0].first
+            self._next = self._segments[-1].last + 1
         if os.path.exists(self._sidecar()):
             with open(self._sidecar()) as fh:
                 meta = json.load(fh)
@@ -79,13 +175,36 @@ class Llog:
                        "first": self._first, "next": self._next}, fh)
         os.replace(tmp, self._sidecar())
 
-    def _append_disk(self, buf: bytes) -> None:
+    def _append_disk(self, seg: _Segment, buf: bytes) -> None:
         if not self.path:
             return
         if self._fh is None:
-            self._fh = open(self.path, "ab")
+            self._fh = open(seg.path, "ab")
         self._fh.write(_LEN.pack(len(buf)) + buf)
         self._fh.flush()
+
+    # -- segment management --------------------------------------------------
+    def _active_segment(self) -> _Segment:
+        if self._segments and len(self._segments[-1]) < self.segment_records:
+            return self._segments[-1]
+        # seal the active segment, roll a new one
+        if self._segments:
+            # freeze to immutable bytes: batch views over a sealed
+            # segment then extract records with a single copy
+            self._segments[-1].data = bytes(self._segments[-1].data)
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+        seg = _Segment(self._next,
+                       self._seg_path(self._next) if self.path else None)
+        self._segments.append(seg)
+        if self._segments[:-1]:
+            self.stats["segments_rolled"] += 1
+        return seg
+
+    @property
+    def segment_count(self) -> int:
+        return len(self._segments)
 
     # -- reader registry -----------------------------------------------------
     @property
@@ -117,24 +236,41 @@ class Llog:
             self._persist_meta()
 
     # -- producing -----------------------------------------------------------
+    def _log_locked(self, rec: R.ChangelogRecord) -> Optional[int]:
+        if self.mask is not None and rec.type not in self.mask:
+            return None
+        rec.index = self._next
+        rec.prev = self._prev_by_key.get(rec.key(), 0)
+        self._prev_by_key[rec.key()] = rec.index
+        if not rec.time:
+            rec.time = R.now_ns()
+        buf = R.pack(rec)
+        seg = self._active_segment()
+        seg.append(buf)
+        self._next += 1
+        self._append_disk(seg, buf)
+        return rec.index
+
     def log(self, rec: R.ChangelogRecord) -> Optional[int]:
         """Append a record; returns its index, or None when not logged
         (no registered reader, or type masked out)."""
         with self._lock:
             if not self._readers:
                 return None
-            if self.mask is not None and rec.type not in self.mask:
-                return None
-            rec.index = self._next
-            rec.prev = self._prev_by_key.get(rec.key(), 0)
-            self._prev_by_key[rec.key()] = rec.index
-            if not rec.time:
-                rec.time = R.now_ns()
-            buf = R.pack(rec)
-            self._recs.append(buf)
-            self._next += 1
-            self._append_disk(buf)
-            return rec.index
+            return self._log_locked(rec)
+
+    def log_batch(self, recs: Iterable[R.ChangelogRecord]) -> List[int]:
+        """Append many records under one lock acquisition; returns the
+        indices of the records actually logged."""
+        out: List[int] = []
+        with self._lock:
+            if not self._readers:
+                return out
+            for rec in recs:
+                idx = self._log_locked(rec)
+                if idx is not None:
+                    out.append(idx)
+        return out
 
     # -- consuming -----------------------------------------------------------
     @property
@@ -145,16 +281,31 @@ class Llog:
     def last_index(self) -> int:
         return self._next - 1
 
-    def read(self, start: int, max_records: int = 1024) -> List[bytes]:
-        """Return packed records with index >= start (at most
-        ``max_records``).  ``start`` is a changelog index, per the paper."""
+    def read(self, start: int, max_records: int = 1024) -> R.RecordBatch:
+        """Return a ``RecordBatch`` view of packed records with index >=
+        ``start`` (at most ``max_records``).  ``start`` is a changelog
+        index, per the paper.  The batch shares the segment buffers —
+        zero copy until a consumer extracts a record."""
         with self._lock:
             if start < self._first:
                 start = self._first
-            lo = start - self._first
-            if lo < 0 or lo >= len(self._recs):
-                return []
-            return self._recs[lo:lo + max_records]
+            views: List[R.RecordBatch] = []
+            want = max_records
+            for seg in self._segments:
+                if want <= 0:
+                    break
+                if seg.last < start or not len(seg):
+                    continue
+                lo = max(0, start - seg.first)
+                take = min(want, len(seg) - lo)
+                if take > 0:
+                    views.append(seg.batch(lo, take))
+                    want -= take
+            if not views:
+                return R.RecordBatch.empty()
+            if len(views) == 1:
+                return views[0]
+            return R.RecordBatch.concat(views)
 
     def ack(self, rid: str, index: int) -> None:
         """Acknowledge (clear) records up to ``index`` for reader ``rid``;
@@ -170,24 +321,22 @@ class Llog:
     def _trim_locked(self) -> None:
         if not self._readers:
             return
-        horizon = min(self._readers.values())
-        drop = horizon - self._first + 1
-        if drop > 0:
-            drop = min(drop, len(self._recs))
-            self._recs = self._recs[drop:]
-            self._first += drop
-            if self.path:
-                self._rewrite_disk()
-
-    def _rewrite_disk(self) -> None:
-        if self._fh is not None:
-            self._fh.close()
-            self._fh = None
-        tmp = self.path + ".tmp"
-        with open(tmp, "wb") as fh:
-            for buf in self._recs:
-                fh.write(_LEN.pack(len(buf)) + buf)
-        os.replace(tmp, self.path)
+        # an over-ack (index beyond anything logged) must not push the
+        # trim point past the records that actually exist
+        horizon = min(min(self._readers.values()), self._next - 1)
+        if horizon < self._first:
+            return
+        self._first = horizon + 1
+        # drop whole segments below the logical trim point — O(1) per
+        # segment, never a journal rewrite
+        while self._segments and self._segments[0].last < self._first:
+            seg = self._segments.pop(0)
+            if len(self._segments) == 0 and self._fh is not None:
+                self._fh.close()
+                self._fh = None
+            if seg.path and os.path.exists(seg.path):
+                os.remove(seg.path)
+            self.stats["segments_dropped"] += 1
 
     def close(self) -> None:
         if self._fh is not None:

@@ -3,18 +3,52 @@
 The paper's proxy loads shared-library modules that pre-process the
 record stream before redistribution — e.g. "records can be dropped for
 operations that compensate each other (creat/unlink) or re-ordered to
-optimize downchain processing".  Same contract here: a module is a
-callable ``batch -> batch`` over parsed records, composed in order.
+optimize downchain processing".  Same contract here, but the unit of
+flow is a ``RecordBatch``: a module is a callable ``batch -> batch``
+that inspects only the header *columns* it needs (type, target fid,
+index — read zero-copy out of the packed buffer) and restructures the
+batch with ``select``/``permute`` views.  No record is ever fully
+decoded, repacked, or copied by a module.
+
+For compatibility (and unit testing), every module also accepts a plain
+``list[ChangelogRecord]`` and returns a list; the selection logic is
+shared between both representations.
 """
 
 from __future__ import annotations
 
 from collections import defaultdict
-from typing import Dict, Iterable, List, Set
+from typing import Dict, Iterable, List, Sequence, Set, Tuple, Union
 
 from . import records as R
 
-Batch = List[R.ChangelogRecord]
+Batch = Union[R.RecordBatch, List[R.ChangelogRecord]]
+
+
+def _types(batch: Batch) -> List[int]:
+    if isinstance(batch, R.RecordBatch):
+        return batch.types()
+    return [r.type for r in batch]
+
+
+def _keys(batch: Batch) -> List[Tuple[int, int, int]]:
+    if isinstance(batch, R.RecordBatch):
+        return batch.keys()
+    return [r.key() for r in batch]
+
+
+def _indices(batch: Batch) -> List[int]:
+    if isinstance(batch, R.RecordBatch):
+        return batch.indices()
+    return [r.index for r in batch]
+
+
+def _take(batch: Batch, rows: Sequence[int]) -> Batch:
+    """Rows ``rows`` of ``batch``, in order — a zero-copy view for a
+    ``RecordBatch``, a plain sub-list otherwise."""
+    if isinstance(batch, R.RecordBatch):
+        return batch.select(rows)
+    return [batch[i] for i in rows]
 
 
 class CancelCompensating:
@@ -28,28 +62,32 @@ class CancelCompensating:
 
     def __init__(self, supersede_ckpt: bool = True):
         self.supersede_ckpt = supersede_ckpt
+        self._destroy_of = {d: c for c, d in self.CANCEL}
 
     def __call__(self, batch: Batch) -> Batch:
+        types, keys = _types(batch), _keys(batch)
         drop: Set[int] = set()
         open_by_key: Dict[tuple, List[int]] = defaultdict(list)
-        for i, rec in enumerate(batch):
-            k = rec.key()
-            for create_t, destroy_t in self.CANCEL:
-                if rec.type == create_t:
-                    open_by_key[(k, create_t)].append(i)
-                elif rec.type == destroy_t and open_by_key.get((k, create_t)):
-                    j = open_by_key[(k, create_t)].pop()
+        creates = {c for c, _ in self.CANCEL}
+        for i, t in enumerate(types):
+            if t in creates:
+                open_by_key[(keys[i], t)].append(i)
+            else:
+                c = self._destroy_of.get(t)
+                if c is not None and open_by_key.get((keys[i], c)):
+                    drop.add(open_by_key[(keys[i], c)].pop())
                     drop.add(i)
-                    drop.add(j)
         if self.supersede_ckpt:
             last: Dict[tuple, int] = {}
-            for i, rec in enumerate(batch):
-                if rec.type == R.CL_CKPT_WRITE:
-                    k = (rec.tfid.seq, rec.tfid.oid)   # shard identity
+            for i, t in enumerate(types):
+                if t == R.CL_CKPT_WRITE:
+                    k = keys[i][:2]            # (run, shard) identity
                     if k in last:
                         drop.add(last[k])
                     last[k] = i
-        return [r for i, r in enumerate(batch) if i not in drop]
+        if not drop:
+            return batch
+        return _take(batch, [i for i in range(len(types)) if i not in drop])
 
 
 class ReorderByTarget:
@@ -59,8 +97,12 @@ class ReorderByTarget:
     processing'."""
 
     def __call__(self, batch: Batch) -> Batch:
-        return sorted(batch, key=lambda r: (r.tfid.seq, r.tfid.oid,
-                                            r.tfid.ver, r.index))
+        keys, indices = _keys(batch), _indices(batch)
+        order = sorted(range(len(keys)),
+                       key=lambda i: (keys[i], indices[i]))
+        if order == list(range(len(keys))):
+            return batch
+        return _take(batch, order)
 
 
 class TypeFilter:
@@ -71,7 +113,11 @@ class TypeFilter:
         self.keep = set(keep)
 
     def __call__(self, batch: Batch) -> Batch:
-        return [r for r in batch if r.type in self.keep]
+        types = _types(batch)
+        rows = [i for i, t in enumerate(types) if t in self.keep]
+        if len(rows) == len(types):
+            return batch
+        return _take(batch, rows)
 
 
 class CoalesceHeartbeats:
@@ -79,9 +125,18 @@ class CoalesceHeartbeats:
     is level-triggered; history adds nothing downstream)."""
 
     def __call__(self, batch: Batch) -> Batch:
+        types = _types(batch)
         last: Dict[int, int] = {}
-        for i, rec in enumerate(batch):
-            if rec.type == R.CL_HEARTBEAT:
-                last[rec.tfid.oid] = i
-        return [r for i, r in enumerate(batch)
-                if r.type != R.CL_HEARTBEAT or last[r.tfid.oid] == i]
+        keys = None
+        for i, t in enumerate(types):
+            if t == R.CL_HEARTBEAT:
+                if keys is None:
+                    keys = _keys(batch)        # only when heartbeats exist
+                last[keys[i][1]] = i           # oid = host id
+        if not last:
+            return batch
+        rows = [i for i, t in enumerate(types)
+                if t != R.CL_HEARTBEAT or last[keys[i][1]] == i]
+        if len(rows) == len(types):
+            return batch
+        return _take(batch, rows)

@@ -17,6 +17,14 @@ Broker between N producers (each exposing an ``Llog``) and M consumers:
 - **at-least-once**: when a consumer dies, its in-flight records are
   redelivered to surviving group members.
 
+The unit of flow is a ``RecordBatch`` end to end: journals hand the
+proxy zero-copy batch views, stream modules restructure them without
+decoding payloads, and dispatch reads only the 8-byte packed index of
+each record.  Records are materialized (one memcpy, still no decode)
+only when placed in a consumer's outbox; per-consumer flag remapping
+uses the plan cache in ``records`` and is a no-op for consumers that
+ask for everything.
+
 The core is synchronous (``pump()``) for determinism; ``LcapService``
 (server.py) wraps it with a polling thread + TCP transport.
 """
@@ -24,6 +32,7 @@ The core is synchronous (``pump()``) for determinism; ``LcapService``
 from __future__ import annotations
 
 import itertools
+import operator
 import threading
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
@@ -32,11 +41,12 @@ from . import records as R
 from .ack import AckTracker
 from .llog import Llog
 
-RecordBatch = List[R.ChangelogRecord]
-Module = Callable[[RecordBatch], RecordBatch]
+Module = Callable[[R.RecordBatch], R.RecordBatch]
 
 PERSISTENT = "persistent"
 EPHEMERAL = "ephemeral"
+
+_by_load = operator.attrgetter("load")   # Consumer.load, single definition
 
 
 class Consumer:
@@ -77,7 +87,7 @@ class LcapProxy:
         self.producers = dict(producers)
         self.modules = list(modules or [])
         self.batch_size = batch_size
-        self.max_buffer = max_buffer
+        self.max_buffer = max_buffer          # records, across buffered batches
         self.outbox_cap = outbox_cap
         self._lock = threading.RLock()
         self._cid_seq = itertools.count(1)
@@ -92,10 +102,11 @@ class LcapProxy:
         self.upstream_acked: Dict[str, int] = dict(self.ingested)
         self.groups: Dict[str, Group] = {}
         self.consumers: Dict[str, Consumer] = {}
-        self._buffer: Deque[Tuple[str, bytes]] = deque()  # ingest → dispatch
+        self._buffer: Deque[Tuple[str, R.RecordBatch]] = deque()
+        self._buffered = 0                    # records currently in _buffer
         self.stats = {"ingested": 0, "dispatched": 0, "dropped_by_modules": 0,
                       "redelivered": 0, "acked_upstream": 0,
-                      "ephemeral_drops": 0}
+                      "ephemeral_drops": 0, "batches_ingested": 0}
 
     # ------------------------------------------------------------------ API
     def add_producer(self, pid: str, log: Llog) -> None:
@@ -128,8 +139,13 @@ class LcapProxy:
                     self._hand_to(cons, pid, idx, buf)
             elif mode == EPHEMERAL:
                 cons = Consumer(cid, None, flags, mode)
-                # connection point: nothing ingested before now (§IV-B)
-                cons.since = dict(self.ingested)  # type: ignore[attr-defined]
+                # connection point: nothing *emitted* before now (§IV-B).
+                # Producer last_index, not the ingest cursor — records
+                # journaled but not yet pumped at attach time are
+                # history, regardless of poller timing.
+                cons.since = {  # type: ignore[attr-defined]
+                    pid: log.last_index
+                    for pid, log in self.producers.items()}
             else:
                 raise ValueError(f"unknown mode {mode}")
             self.consumers[cid] = cons
@@ -159,27 +175,37 @@ class LcapProxy:
 
     fail = lambda self, cid: self.unsubscribe(cid, failed=True)  # noqa: E731
 
+    def _consumer(self, cid: str) -> Consumer:
+        try:
+            return self.consumers[cid]
+        except KeyError:
+            raise KeyError(f"unknown or unsubscribed consumer {cid!r}") \
+                from None
+
     # ------------------------------------------------------------- ingest
     def _ingest(self) -> int:
         n = 0
         for pid, log in self.producers.items():
-            rid = self.reader_ids[pid]
-            while len(self._buffer) < self.max_buffer:
+            while self._buffered < self.max_buffer:
                 batch = log.read(self.cursors[pid], self.batch_size)
                 if not batch:
                     break
-                recs = [R.unpack(b) for b in batch]
-                hi = max(r.index for r in recs)
+                got = len(batch)
+                hi = batch.packed_index(got - 1)   # journal order: ascending
                 self.cursors[pid] = hi + 1
-                kept = recs
+                kept = batch
                 for mod in self.modules:
                     kept = mod(kept)
-                self.stats["dropped_by_modules"] += len(recs) - len(kept)
-                for rec in kept:
-                    self._buffer.append((pid, R.pack(rec)))
+                if not isinstance(kept, R.RecordBatch):  # legacy list module
+                    kept = R.RecordBatch.from_records(kept)
+                self.stats["dropped_by_modules"] += got - len(kept)
+                if len(kept):
+                    self._buffer.append((pid, kept))
+                    self._buffered += len(kept)
                 self.ingested[pid] = hi
-                n += len(recs)
-                if len(batch) < self.batch_size:
+                self.stats["batches_ingested"] += 1
+                n += got
+                if got < self.batch_size:
                     break
         self.stats["ingested"] += n
         return n
@@ -187,7 +213,7 @@ class LcapProxy:
     # ----------------------------------------------------------- dispatch
     def _hand_to(self, cons: Consumer, pid: str, idx: int, buf: bytes) -> None:
         # remote remap: strip fields the consumer did not ask for (§IV-A)
-        out = R.remap(buf, R.packed_flags(buf) & cons.flags)
+        out = R.remap_cached(buf, R.packed_flags(buf) & cons.flags)
         cons.outbox.append((pid, idx, out))
         cons.in_flight[(pid, idx)] = buf
         cons.delivered += 1
@@ -205,27 +231,77 @@ class LcapProxy:
 
     def _dispatch(self) -> int:
         n = 0
+        cap = self.outbox_cap
+        groups = list(self.groups.values())
+        persistent = [c for c in self.consumers.values()
+                      if c.mode == PERSISTENT and c.alive]
+        ephemerals = [c for c in self.consumers.values()
+                      if c.mode == EPHEMERAL and c.alive]
+        # backpressure: never dispatch into a saturated persistent
+        # consumer.  Checked once at entry; afterwards O(1) per record
+        # (only an outbox we just appended to can newly saturate).
+        if any(len(c.outbox) >= cap for c in persistent):
+            return 0
+        pflags = R.packed_flags
+        remap = R.remap_cached
+        by_load = _by_load
+
+        def stamp(cons: Consumer, buf: bytes) -> bytes:
+            # remote remap: strip fields the consumer did not ask for
+            # (§IV-A); identity (no copy) when it asked for everything
+            src = pflags(buf)
+            want = src & cons.flags
+            return buf if want == src else remap(buf, want)
+
+        dispatched = 0
         while self._buffer:
-            # backpressure: stop when any persistent consumer is saturated
-            if any(len(c.outbox) >= self.outbox_cap
-                   for c in self.consumers.values()
-                   if c.mode == PERSISTENT and c.alive):
+            pid, batch = self._buffer.popleft()
+            self._buffered -= len(batch)
+            # per-(batch, group) state — membership cannot change while
+            # the proxy lock is held
+            states = [(g, g.tracker(pid),
+                       [m for m in g.members.values() if m.alive])
+                      for g in groups]
+            packed_index = batch.packed_index
+            packed = batch.packed
+            total = len(batch)
+            stop = None
+            for i in range(total):
+                idx = packed_index(i)
+                buf = packed(i) if (states or ephemerals) else None
+                full = False
+                for grp, tracker, live in states:
+                    tracker.deliver(idx)
+                    if not live:
+                        grp.pending.append((pid, idx, buf))
+                        continue
+                    cons = live[0] if len(live) == 1 else min(live,
+                                                              key=by_load)
+                    cons.outbox.append((pid, idx, stamp(cons, buf)))
+                    cons.in_flight[(pid, idx)] = buf
+                    cons.delivered += 1
+                    dispatched += 1
+                    if len(cons.outbox) >= cap:
+                        full = True
+                for cons in ephemerals:
+                    if idx <= cons.since.get(pid, -1):  # type: ignore
+                        continue  # emitted before connection (§IV-B)
+                    if len(cons.outbox) >= cap:
+                        self.stats["ephemeral_drops"] += 1   # radio semantics
+                        continue
+                    cons.outbox.append((pid, idx, stamp(cons, buf)))
+                n += 1
+                if full:
+                    stop = i + 1
+                    break
+            if stop is not None:
+                if stop < total:
+                    # the rest of the batch goes back (a view — no copy)
+                    rest = batch[stop:]
+                    self._buffer.appendleft((pid, rest))
+                    self._buffered += len(rest)
                 break
-            pid, buf = self._buffer.popleft()
-            idx = R.unpack(buf).index
-            for grp in self.groups.values():
-                self._dispatch_to_group(grp, pid, idx, buf)
-            for cons in self.consumers.values():
-                if cons.mode != EPHEMERAL or not cons.alive:
-                    continue
-                if idx <= cons.since.get(pid, -1):  # type: ignore
-                    continue  # emitted before connection (§IV-B)
-                if len(cons.outbox) >= self.outbox_cap:
-                    self.stats["ephemeral_drops"] += 1   # radio semantics
-                    continue
-                out = R.remap(buf, R.packed_flags(buf) & cons.flags)
-                cons.outbox.append((pid, idx, out))
-            n += 1
+        self.stats["dispatched"] += dispatched
         return n
 
     def pump(self) -> int:
@@ -236,23 +312,56 @@ class LcapProxy:
             return a + b
 
     # -------------------------------------------------------------- fetch
-    def fetch(self, cid: str, max_records: int = 256) -> List[Tuple[str, int, bytes]]:
+    def fetch(self, cid: str,
+              max_records: int = 256) -> List[Tuple[str, int, bytes]]:
         with self._lock:
-            cons = self.consumers[cid]
+            cons = self._consumer(cid)
             out = []
             while cons.outbox and len(out) < max_records:
                 out.append(cons.outbox.popleft())
             return out
 
+    def fetch_batches(self, cid: str, max_records: int = 1024,
+                      ) -> List[Tuple[str, R.RecordBatch]]:
+        """Drain up to ``max_records`` from the consumer's outbox as
+        per-producer ``RecordBatch``es (consecutive same-producer runs
+        stay one batch — the unit that goes on the wire)."""
+        with self._lock:
+            cons = self._consumer(cid)
+            runs: List[Tuple[str, List[bytes]]] = []
+            taken = 0
+            while cons.outbox and taken < max_records:
+                pid, idx, buf = cons.outbox.popleft()
+                if not runs or runs[-1][0] != pid:
+                    runs.append((pid, []))
+                runs[-1][1].append(buf)
+                taken += 1
+            return [(pid, R.RecordBatch.from_packed(bufs))
+                    for pid, bufs in runs]
+
     # ---------------------------------------------------------------- ack
     def ack(self, cid: str, pid: str, index: int) -> None:
         with self._lock:
-            cons = self.consumers[cid]
+            cons = self._consumer(cid)
             if cons.mode == EPHEMERAL:
                 return  # ephemeral readers are not expected to ack (§IV-B)
             cons.in_flight.pop((pid, index), None)
             grp = self.groups[cons.group]
             grp.tracker(pid).ack(index)
+            self._ack_upstream(pid)
+
+    def ack_batch(self, cid: str, pid: str, indices: List[int]) -> None:
+        """Acknowledge many records of one producer under a single lock
+        acquisition and a single upstream-watermark propagation."""
+        with self._lock:
+            cons = self._consumer(cid)
+            if cons.mode == EPHEMERAL or not indices:
+                return
+            grp = self.groups[cons.group]
+            pop = cons.in_flight.pop
+            for index in indices:
+                pop((pid, index), None)
+            grp.tracker(pid).ack_many(indices)
             self._ack_upstream(pid)
 
     def _group_position(self, grp: Group, pid: str) -> int:
@@ -266,7 +375,8 @@ class LcapProxy:
     def _ack_upstream(self, pid: str) -> None:
         if not self.groups:
             return
-        horizon = min(self._group_position(g, pid) for g in self.groups.values())
+        horizon = min(self._group_position(g, pid)
+                      for g in self.groups.values())
         if horizon > self.upstream_acked.get(pid, 0):
             self.producers[pid].ack(self.reader_ids[pid], horizon)
             self.upstream_acked[pid] = horizon

@@ -9,14 +9,21 @@ Two bindings share one interface:
 - ``LocalReader`` talks to an in-process ``LcapProxy``;
 - ``RemoteReader`` talks to an ``LcapService`` over TCP (server.py).
 
+Both move whole ``RecordBatch``es: ``fetch_batches()`` returns
+``(producer, RecordBatch)`` pairs (one wire frame per batch for the
+remote binding), and ``fetch()`` is the record-level convenience view
+over the same path.  ``ack_batch()`` acknowledges a whole batch in one
+call/RPC.
+
 The client performs the *local* half of record remapping: fields the
 consumer requested but the record (as stripped by the proxy) does not
-carry are zero-filled locally (§IV-A).
+carry are zero-filled locally (§IV-A) — per batch, through the remap
+plan cache.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import Iterable, List, Optional, Tuple
 
 from . import records as R
 from .proxy import EPHEMERAL, PERSISTENT, LcapProxy
@@ -26,9 +33,30 @@ from .transport import RpcClient
 class _Base:
     flags: int
 
-    def _remap_local(self, buf: bytes) -> R.ChangelogRecord:
+    def _remap_local(self, batch: R.RecordBatch) -> R.RecordBatch:
         # local remap: add (zero-fill) missing requested fields
-        return R.unpack(R.remap(buf, self.flags))
+        return batch.remap(self.flags)
+
+    def _flatten(self, batches: List[Tuple[str, R.RecordBatch]],
+                 ) -> List[Tuple[str, R.ChangelogRecord]]:
+        out = []
+        for pid, batch in batches:
+            for i in range(len(batch)):
+                rec = batch.record(i)
+                out.append((pid, rec))
+        return out
+
+    # record-level convenience over the batch path ---------------------------
+    def fetch(self, max_records: int = 256,
+              ) -> List[Tuple[str, R.ChangelogRecord]]:
+        return self._flatten(self.fetch_batches(max_records))
+
+    def fetch_batches(self, max_records: int = 256,
+                      ) -> List[Tuple[str, R.RecordBatch]]:
+        raise NotImplementedError
+
+    def ack_batch(self, pid: str, indices: Iterable[int]) -> None:
+        raise NotImplementedError
 
 
 class LocalReader(_Base):
@@ -39,16 +67,17 @@ class LocalReader(_Base):
         self.cid = proxy.subscribe(group, flags, mode)
         self.mode = mode
 
-    def fetch(self, max_records: int = 256) -> List[Tuple[str, R.ChangelogRecord]]:
-        out = []
-        for pid, idx, buf in self.proxy.fetch(self.cid, max_records):
-            rec = self._remap_local(buf)
-            rec.index = idx
-            out.append((pid, rec))
-        return out
+    def fetch_batches(self, max_records: int = 256,
+                      ) -> List[Tuple[str, R.RecordBatch]]:
+        return [(pid, self._remap_local(batch))
+                for pid, batch in self.proxy.fetch_batches(self.cid,
+                                                           max_records)]
 
     def ack(self, pid: str, index: int) -> None:
         self.proxy.ack(self.cid, pid, index)
+
+    def ack_batch(self, pid: str, indices: Iterable[int]) -> None:
+        self.proxy.ack_batch(self.cid, pid, list(indices))
 
     def close(self, failed: bool = False) -> None:
         self.proxy.unsubscribe(self.cid, failed=failed)
@@ -66,19 +95,22 @@ class RemoteReader(_Base):
         self.cid = reply["cid"]
         self.mode = mode
 
-    def fetch(self, max_records: int = 256) -> List[Tuple[str, R.ChangelogRecord]]:
+    def fetch_batches(self, max_records: int = 256,
+                      ) -> List[Tuple[str, R.RecordBatch]]:
         reply = self.rpc.call({"op": "fetch", "cid": self.cid,
                                "max": max_records})
-        out = []
-        for pid, idx, buf in reply["recs"]:
-            rec = self._remap_local(buf)
-            rec.index = idx
-            out.append((pid, rec))
-        return out
+        if reply.get("err"):
+            raise RuntimeError(reply["err"])
+        return [(pid, self._remap_local(R.RecordBatch.from_wire(blob)))
+                for pid, blob in reply["batches"]]
 
     def ack(self, pid: str, index: int) -> None:
         self.rpc.call({"op": "ack", "cid": self.cid, "pid": pid,
                        "index": index})
+
+    def ack_batch(self, pid: str, indices: Iterable[int]) -> None:
+        self.rpc.call({"op": "ack_batch", "cid": self.cid, "pid": pid,
+                       "indices": list(indices)})
 
     def close(self, failed: bool = False) -> None:
         if failed:

@@ -38,7 +38,8 @@ from __future__ import annotations
 import struct
 import time as _time
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple, Union)
 
 import msgpack
 
@@ -338,3 +339,258 @@ def remap(buf: bytes, target_flags: int) -> bytes:
     else:
         parts.append(name_and_tail)
     return b"".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Cached remap plans.
+#
+# ``remap`` rebuilds its slicing decisions from the flag masks on every
+# call.  The proxy remaps every dispatched record against every
+# consumer's mask, but the number of distinct (src_flags, target_flags)
+# pairs is tiny (<= 32 x 32); a compiled per-pair plan amortizes all of
+# the mask branching.  Pairs whose fields are all fixed-size get a fully
+# static slicing closure; pairs involving CLF_METRICS/CLF_XATTR fall
+# back to the generic path (their sizes live in the record itself).
+# ---------------------------------------------------------------------------
+CLF_VARIABLE = CLF_METRICS | CLF_XATTR
+_FIXED_SIZES = {CLF_RENAME: 2 * _FID.size, CLF_JOBID: _JOBID_LEN,
+                CLF_SHARD: _SHARD.size}
+_FLAG_ORDER = (CLF_RENAME, CLF_JOBID, CLF_SHARD, CLF_METRICS, CLF_XATTR)
+
+_REMAP_PLANS: Dict[Tuple[int, int], Callable[[bytes], bytes]] = {}
+
+
+def _compile_remap(src: int, dst: int) -> Callable[[bytes], bytes]:
+    if (src | dst) & CLF_VARIABLE:
+        return lambda buf: remap(buf, dst)
+    src_off: Dict[int, int] = {}
+    off = HDR_SIZE
+    for f in _FLAG_ORDER:
+        if src & f:
+            src_off[f] = off
+            off += _FIXED_SIZES[f]
+    name_off = off
+    # ('copy', lo, hi) slices from the source; ('zero', blob) fills
+    segs: List[Tuple[str, Any, Any]] = []
+    for f in _FLAG_ORDER:
+        if dst & f:
+            if src & f:
+                lo = src_off[f]
+                if segs and segs[-1][0] == "copy" and segs[-1][2] == lo:
+                    segs[-1] = ("copy", segs[-1][1], lo + _FIXED_SIZES[f])
+                else:
+                    segs.append(("copy", lo, lo + _FIXED_SIZES[f]))
+            else:
+                zero = b"\0" * _FIXED_SIZES[f]
+                segs.append(("zero", zero, None))
+    flags_patch = struct.pack("<H", dst)
+    add_rename = bool(dst & CLF_RENAME) and not (src & CLF_RENAME)
+    strip_rename = bool(src & CLF_RENAME) and not (dst & CLF_RENAME)
+
+    def plan(buf: bytes) -> bytes:
+        parts = [buf[:2], flags_patch, buf[4:HDR_SIZE]]
+        for kind, a, b in segs:
+            parts.append(buf[a:b] if kind == "copy" else a)
+        if strip_rename:
+            namelen = buf[0] | (buf[1] << 8)
+            parts.append(buf[name_off:name_off + namelen])
+        elif add_rename:
+            parts.append(buf[name_off:])
+            parts.append(b"\0")
+        else:
+            parts.append(buf[name_off:])
+        return b"".join(parts)
+
+    return plan
+
+
+def remap_cached(buf: bytes, target_flags: int) -> bytes:
+    """Plan-cached equivalent of ``remap`` (identical output)."""
+    dst = target_flags & CLF_SUPPORTED
+    src = packed_flags(buf)
+    if src == dst:
+        return buf
+    try:
+        plan = _REMAP_PLANS[(src, dst)]
+    except KeyError:
+        plan = _REMAP_PLANS[(src, dst)] = _compile_remap(src, dst)
+    return plan(buf)
+
+
+# ---------------------------------------------------------------------------
+# RecordBatch — the batch-native unit of flow.
+#
+# A batch is a packed buffer plus an offsets/lengths table.  Header
+# fields are readable per record (and as whole columns) straight out of
+# the buffer with ``struct.unpack_from`` — no per-record object, no
+# msgpack decode — and full decode (``record(i)``) is lazy.  ``select``/
+# ``permute`` produce views sharing the underlying buffer, so stream
+# modules that drop or reorder records never copy payload bytes.
+# ---------------------------------------------------------------------------
+_U16 = struct.Struct("<H")
+_U64 = struct.Struct("<Q")
+_TFID_AT = struct.Struct("<QII")
+
+Buffer = Union[bytes, bytearray, memoryview]
+
+
+class RecordBatch:
+    __slots__ = ("buf", "_off", "_len", "_recs")
+
+    def __init__(self, buf: Buffer, offsets: Sequence[int],
+                 lengths: Sequence[int]):
+        self.buf = buf
+        self._off = list(offsets)
+        self._len = list(lengths)
+        self._recs: Dict[int, ChangelogRecord] = {}
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def empty(cls) -> "RecordBatch":
+        return cls(b"", (), ())
+
+    @classmethod
+    def from_packed(cls, bufs: Iterable[bytes]) -> "RecordBatch":
+        offsets, lengths, off = [], [], 0
+        chunks = []
+        for b in bufs:
+            chunks.append(b)
+            offsets.append(off)
+            lengths.append(len(b))
+            off += len(b)
+        return cls(b"".join(chunks), offsets, lengths)
+
+    @classmethod
+    def from_records(cls, recs: Iterable[ChangelogRecord]) -> "RecordBatch":
+        return cls.from_packed(pack(r) for r in recs)
+
+    # -- sizing / iteration (list-of-packed-bytes compatible) ---------------
+    def __len__(self) -> int:
+        return len(self._off)
+
+    def __bool__(self) -> bool:
+        return bool(self._off)
+
+    def __iter__(self):
+        for i in range(len(self._off)):
+            yield self.packed(i)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return RecordBatch(self.buf, self._off[i], self._len[i])
+        return self.packed(i)
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, RecordBatch):
+            return list(self) == list(other)
+        if isinstance(other, (list, tuple)):
+            return list(self) == list(other)
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return f"RecordBatch({len(self)} records, {self.nbytes}B)"
+
+    @property
+    def nbytes(self) -> int:
+        return sum(self._len)
+
+    # -- zero-copy header accessors -----------------------------------------
+    def packed(self, i: int) -> bytes:
+        o = self._off[i]
+        buf = self.buf
+        if type(buf) is bytes:
+            return buf[o:o + self._len[i]]       # one copy
+        return bytes(buf[o:o + self._len[i]])    # bytearray: slice + freeze
+
+    def packed_namelen(self, i: int) -> int:
+        return _U16.unpack_from(self.buf, self._off[i])[0]
+
+    def packed_flags(self, i: int) -> int:
+        return _U16.unpack_from(self.buf, self._off[i] + 2)[0]
+
+    def packed_type(self, i: int) -> int:
+        return _U16.unpack_from(self.buf, self._off[i] + 4)[0]
+
+    def packed_index(self, i: int) -> int:
+        return _U64.unpack_from(self.buf, self._off[i] + 8)[0]
+
+    def packed_time(self, i: int) -> int:
+        return _U64.unpack_from(self.buf, self._off[i] + 24)[0]
+
+    def packed_tfid(self, i: int) -> Tuple[int, int, int]:
+        return _TFID_AT.unpack_from(self.buf, self._off[i] + 32)
+
+    packed_key = packed_tfid   # target identity == tfid triple
+
+    # -- whole columns (for batch-level stream modules) ---------------------
+    def types(self) -> List[int]:
+        u, buf = _U16.unpack_from, self.buf
+        return [u(buf, o + 4)[0] for o in self._off]
+
+    def indices(self) -> List[int]:
+        u, buf = _U64.unpack_from, self.buf
+        return [u(buf, o + 8)[0] for o in self._off]
+
+    def flags_column(self) -> List[int]:
+        u, buf = _U16.unpack_from, self.buf
+        return [u(buf, o + 2)[0] for o in self._off]
+
+    def keys(self) -> List[Tuple[int, int, int]]:
+        u, buf = _TFID_AT.unpack_from, self.buf
+        return [u(buf, o + 32) for o in self._off]
+
+    # -- lazy decode ---------------------------------------------------------
+    def record(self, i: int) -> ChangelogRecord:
+        rec = self._recs.get(i)
+        if rec is None:
+            rec = self._recs[i] = unpack(self.packed(i))
+        return rec
+
+    def to_records(self) -> List[ChangelogRecord]:
+        return [self.record(i) for i in range(len(self))]
+
+    # -- zero-copy restructuring --------------------------------------------
+    def select(self, keep: Iterable[int]) -> "RecordBatch":
+        """View containing rows ``keep`` (in the given order), sharing
+        the payload buffer."""
+        keep = list(keep)
+        return RecordBatch(self.buf, [self._off[i] for i in keep],
+                           [self._len[i] for i in keep])
+
+    permute = select
+
+    @staticmethod
+    def concat(batches: Sequence["RecordBatch"]) -> "RecordBatch":
+        batches = [b for b in batches if len(b)]
+        if not batches:
+            return RecordBatch.empty()
+        if len(batches) == 1:
+            return batches[0]
+        return RecordBatch.from_packed(
+            buf for b in batches for buf in b)
+
+    # -- per-batch remap (plan-cached) --------------------------------------
+    def remap(self, target_flags: int) -> "RecordBatch":
+        dst = target_flags & CLF_SUPPORTED
+        if all(f == dst for f in self.flags_column()):
+            return self
+        return RecordBatch.from_packed(
+            remap_cached(self.packed(i), dst) for i in range(len(self)))
+
+    # -- wire framing --------------------------------------------------------
+    # u32 count | count * u32 record length | concatenated payload
+    def to_wire(self) -> bytes:
+        n = len(self)
+        head = struct.pack(f"<I{n}I", n, *self._len)
+        return head + b"".join(self)
+
+    @staticmethod
+    def from_wire(blob: Buffer) -> "RecordBatch":
+        (n,) = struct.unpack_from("<I", blob, 0)
+        lengths = list(struct.unpack_from(f"<{n}I", blob, 4))
+        offsets, off = [], 4 + 4 * n
+        for ln in lengths:
+            offsets.append(off)
+            off += ln
+        return RecordBatch(blob if isinstance(blob, bytes) else bytes(blob),
+                           offsets, lengths)

@@ -38,10 +38,18 @@ class LcapService:
                 session["cid"] = cid
                 return {"cid": cid}
             if op == "fetch":
-                recs = self.proxy.fetch(msg["cid"], msg.get("max", 256))
-                return {"recs": [(pid, idx, buf) for pid, idx, buf in recs]}
+                # whole batches on the wire: one (producer, frame) pair
+                # per consecutive same-producer run (u32 count + u32
+                # lengths + concatenated packed records)
+                batches = self.proxy.fetch_batches(msg["cid"],
+                                                   msg.get("max", 256))
+                return {"batches": [(pid, batch.to_wire())
+                                    for pid, batch in batches]}
             if op == "ack":
                 self.proxy.ack(msg["cid"], msg["pid"], msg["index"])
+                return {"ok": True}
+            if op == "ack_batch":
+                self.proxy.ack_batch(msg["cid"], msg["pid"], msg["indices"])
                 return {"ok": True}
             if op == "close":
                 session.pop("cid", None)

@@ -2,7 +2,11 @@
 
 Message framing: u32 length prefix + msgpack payload.  The proxy exposes
 a request/response service (register / fetch / ack / close); consumers
-poll, exactly like Lustre changelog readers do.
+poll, exactly like Lustre changelog readers do.  Record payloads ride
+inside the msgpack body as whole ``RecordBatch`` wire frames (see
+``records.RecordBatch.to_wire``) — one message moves a batch, not a
+record, so the per-message overhead (syscalls, framing, Nagle
+interactions) amortizes across the batch.
 """
 
 from __future__ import annotations
@@ -43,6 +47,8 @@ def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
             return None
         if not chunk:
             return None
+        if len(chunk) == n and not chunks:
+            return chunk                 # whole frame in one recv
         chunks.append(chunk)
         n -= len(chunk)
     return b"".join(chunks)
@@ -62,6 +68,10 @@ class RpcServer:
         outer = self
 
         class _Handler(socketserver.BaseRequestHandler):
+            def setup(self):
+                self.request.setsockopt(socket.IPPROTO_TCP,
+                                        socket.TCP_NODELAY, 1)
+
             def handle(self):
                 session: Dict[str, Any] = {}
                 try:
@@ -98,6 +108,8 @@ class RpcServer:
 class RpcClient:
     def __init__(self, address: Tuple[str, int], timeout: float = 10.0):
         self._sock = socket.create_connection(address, timeout=timeout)
+        # request/response over small frames: latency beats coalescing
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
 
     def call(self, msg: Dict[str, Any]) -> Dict[str, Any]:
         send_msg(self._sock, msg)

@@ -28,9 +28,8 @@ def synthesize_index_stream(index: Iterable[Tuple[int, int, str, int]],
     """
     log = Llog(producer_id)
     log.register_reader("bootstrap-hold")  # arms logging; holds trim
-    for oid, ver, name, nbytes in index:
-        log.log(R.ChangelogRecord(
-            type=R.CL_MARK, tfid=R.Fid(run_id, oid, ver),
-            name=name.encode(), metrics=(float(nbytes),),
-            xattr={"bootstrap": True}))
+    log.log_batch(R.ChangelogRecord(
+        type=R.CL_MARK, tfid=R.Fid(run_id, oid, ver),
+        name=name.encode(), metrics=(float(nbytes),),
+        xattr={"bootstrap": True}) for oid, ver, name, nbytes in index)
     return log

@@ -31,17 +31,26 @@ from ..core.reader import LocalReader
 
 
 class _GroupWorker:
-    """Base: pull records from a LocalReader, process, ack."""
+    """Base: pull record batches from a LocalReader, process, ack the
+    whole batch at once (acks "may be delayed and batched", paper §II)."""
 
     def __init__(self, proxy, group: str, flags: int = R.CLF_SUPPORTED):
         self.reader = LocalReader(proxy, group, flags=flags)
 
     def poll(self, max_records: int = 256) -> int:
-        batch = self.reader.fetch(max_records)
-        for pid, rec in batch:
-            self.handle(pid, rec)
-            self.reader.ack(pid, rec.index)
-        return len(batch)
+        n = 0
+        for pid, batch in self.reader.fetch_batches(max_records):
+            self.handle_batch(pid, batch)
+            self.reader.ack_batch(pid, batch.indices())
+            n += len(batch)
+        return n
+
+    def handle_batch(self, pid: str, batch: R.RecordBatch) -> None:
+        """Default: decode lazily, process record by record.  Workers
+        with a batch-shaped sink (e.g. one DB transaction per batch)
+        override this."""
+        for i in range(len(batch)):
+            self.handle(pid, batch.record(i))
 
     def handle(self, pid: str, rec: R.ChangelogRecord) -> None:
         raise NotImplementedError
@@ -71,15 +80,27 @@ class MetricsDB(_GroupWorker):
         self.conn.execute(self.SCHEMA)
         self.conn.commit()
 
-    def handle(self, pid: str, rec: R.ChangelogRecord) -> None:
+    @staticmethod
+    def _row(pid: str, rec: R.ChangelogRecord) -> tuple:
         m = (list(rec.metrics or []) + [None] * 3)[:3]
         shard = rec.shard or (0, 0, 0, 0)
+        return (pid, rec.index, rec.type, rec.time, rec.tfid.seq,
+                rec.tfid.oid, rec.tfid.ver, rec.name.decode(errors="replace"),
+                (rec.jobid or b"").decode(errors="replace"),
+                shard[0], shard[1], m[0], m[1], m[2])
+
+    def handle_batch(self, pid: str, batch: R.RecordBatch) -> None:
+        # one transaction per batch — the whole point of batch flow for
+        # a DB-shaped consumer
+        self.conn.executemany(
+            "INSERT INTO events VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?)",
+            [self._row(pid, batch.record(i)) for i in range(len(batch))])
+        self.conn.commit()
+
+    def handle(self, pid: str, rec: R.ChangelogRecord) -> None:
         self.conn.execute(
             "INSERT INTO events VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?)",
-            (pid, rec.index, rec.type, rec.time, rec.tfid.seq, rec.tfid.oid,
-             rec.tfid.ver, rec.name.decode(errors="replace"),
-             (rec.jobid or b"").decode(errors="replace"),
-             shard[0], shard[1], m[0], m[1], m[2]))
+            self._row(pid, rec))
         self.conn.commit()
 
     def query(self, sql: str, args=()) -> List[tuple]:
@@ -218,14 +239,19 @@ class CacheInvalidator(_GroupWorker):
         self.invalidated = 0
 
     def poll(self, max_records: int = 256) -> int:
-        batch = self.reader.fetch(max_records)
-        for pid, rec in batch:
-            if rec.type == R.CL_EVICT:
-                if self.cache.pop((rec.tfid.oid, rec.tfid.ver), None) is not None:
-                    self.invalidated += 1
+        n = 0
+        for pid, batch in self.reader.fetch_batches(max_records):
+            for i in range(len(batch)):
+                # type + tfid straight from the packed header — an
+                # invalidator never needs the record body
+                if batch.packed_type(i) == R.CL_EVICT:
+                    _, oid, ver = batch.packed_tfid(i)
+                    if self.cache.pop((oid, ver), None) is not None:
+                        self.invalidated += 1
             if self.reader.mode == "persistent":
-                self.reader.ack(pid, rec.index)
-        return len(batch)
+                self.reader.ack_batch(pid, batch.indices())
+            n += len(batch)
+        return n
 
     def close(self) -> None:
         self.reader.close()

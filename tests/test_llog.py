@@ -2,6 +2,8 @@
 index/prev chaining, per-reader acks, trim at the collective watermark,
 persistence across reopen."""
 
+import os
+
 import pytest
 
 from repro.core import records as R
@@ -120,3 +122,144 @@ def test_duplicate_reader_rejected():
     log.register_reader("cl1")
     with pytest.raises(ValueError):
         log.register_reader("cl1")
+
+
+# ------------------------------------------------------- segmented storage
+def test_trim_drops_whole_segments_without_rewrite(tmp_path):
+    """Satellite/tentpole: trimming drops sealed segment files in O(1);
+    the journal is never rewritten."""
+    p = str(tmp_path / "mdt0.llog")
+    log = Llog("mdt0", path=p, segment_records=4)
+    rid = log.register_reader()
+    for i in range(10):
+        log.log(rec(oid=i))
+    assert log.segment_count == 3            # 4 + 4 + 2
+    seg_files = sorted(tmp_path.glob("mdt0.llog.seg.*"))
+    assert len(seg_files) == 3
+    log.ack(rid, 8)                          # covers segments 1 and 2
+    assert log.stats["segments_dropped"] == 2
+    assert log.first_index == 9
+    remaining = sorted(tmp_path.glob("mdt0.llog.seg.*"))
+    assert len(remaining) == 1               # dropped files deleted
+    # the surviving segment file was never rewritten: still append-only
+    assert [R.unpack(b).index for b in log.read(9, 10)] == [9, 10]
+    log.ack(rid, 10)
+    assert log.first_index == 11
+    log.close()
+
+
+def test_partial_segment_ack_keeps_segment_but_moves_first(tmp_path):
+    p = str(tmp_path / "mdt0.llog")
+    log = Llog("mdt0", path=p, segment_records=8)
+    rid = log.register_reader()
+    for i in range(6):
+        log.log(rec(oid=i))
+    log.ack(rid, 3)                          # mid-segment: no file drop
+    assert log.stats["segments_dropped"] == 0
+    assert log.first_index == 4              # logical trim point moved
+    assert [R.unpack(b).index for b in log.read(1, 10)] == [4, 5, 6]
+    log.close()
+
+
+def test_crash_recovery_drops_truncated_final_record(tmp_path):
+    """Satellite: a record half-written at crash time is dropped on
+    load, never a parse error; intact records before it survive."""
+    p = str(tmp_path / "mdt0.llog")
+    log = Llog("mdt0", path=p)
+    log.register_reader("r")
+    for i in range(3):
+        log.log(rec(oid=i, name=f"keep{i}".encode()))
+    log.close()
+    seg = sorted(tmp_path.glob("mdt0.llog.seg.*"))[0]
+    blob = seg.read_bytes()
+    # simulate a torn append: length prefix + half a record
+    seg.write_bytes(blob + b"\x40\x00\x00\x00" + b"\xab" * 17)
+
+    log2 = Llog("mdt0", path=p)
+    assert log2.stats["truncated_dropped"] == 1
+    assert log2.last_index == 3
+    assert [R.unpack(b).name for b in log2.read(1, 10)] == \
+        [b"keep0", b"keep1", b"keep2"]
+    # the torn bytes were truncated away; appending again stays parseable
+    assert log2.log(rec(oid=9, name=b"after")) == 4
+    log2.close()
+    log3 = Llog("mdt0", path=p)
+    assert [R.unpack(b).name for b in log3.read(1, 10)] == \
+        [b"keep0", b"keep1", b"keep2", b"after"]
+    log3.close()
+
+
+def test_read_returns_batch_view_across_segments():
+    log = Llog("mdt0", segment_records=3)
+    log.register_reader()
+    for i in range(8):
+        log.log(rec(oid=i))
+    batch = log.read(2, 5)
+    assert isinstance(batch, R.RecordBatch)
+    assert batch.indices() == [2, 3, 4, 5, 6]
+    # single-segment reads share the segment buffer (zero copy)
+    one = log.read(4, 2)
+    assert one.indices() == [4, 5]
+
+
+def test_legacy_single_file_journal_migrates(tmp_path):
+    """A pre-segmentation journal (one file of length-prefixed records)
+    is migrated into segment files on first open."""
+    import struct as _s
+    p = str(tmp_path / "old.llog")
+    bufs = []
+    for i in range(4):
+        r = rec(oid=i, name=f"old{i}".encode())
+        r.index = i + 1
+        bufs.append(R.pack(r))
+    with open(p, "wb") as fh:
+        for b in bufs:
+            fh.write(_s.pack("<I", len(b)) + b)
+    log = Llog("mdt0", path=p)
+    assert log.first_index == 1 and log.last_index == 4
+    assert [R.unpack(b).name for b in log.read(1, 10)] == \
+        [b"old0", b"old1", b"old2", b"old3"]
+    assert not os.path.exists(p)             # legacy file replaced
+    assert sorted(tmp_path.glob("old.llog.seg.*"))
+    log.close()
+
+
+
+def test_over_ack_never_orphans_future_records():
+    """Acking beyond last_index must clamp: records logged afterwards
+    stay readable (regression: unclamped horizon pushed first_index past
+    the index space and made the journal permanently empty)."""
+    log = Llog("mdt0")
+    rid = log.register_reader()
+    for i in range(3):
+        log.log(rec(oid=i))
+    log.ack(rid, 10)                         # over-ack: only 3 exist
+    assert log.first_index == 4              # clamped to last_index + 1
+    assert log.log(rec(oid=9)) == 4
+    assert [R.unpack(b).index for b in log.read(1, 10)] == [4]
+    log.ack(rid, 4)
+    assert log.first_index == 5
+
+
+def test_crash_recovery_truncates_partial_length_prefix(tmp_path):
+    """A torn append may leave only 1-3 bytes of the u32 length prefix;
+    recovery must truncate them too, or records appended afterwards sit
+    behind garbage and are destroyed by the *next* recovery."""
+    p = str(tmp_path / "mdt0.llog")
+    log = Llog("mdt0", path=p)
+    log.register_reader("r")
+    for i in range(3):
+        log.log(rec(oid=i))
+    log.close()
+    seg = sorted(tmp_path.glob("mdt0.llog.seg.*"))[0]
+    seg.write_bytes(seg.read_bytes() + b"\x40\x00")   # half a length prefix
+
+    log2 = Llog("mdt0", path=p)
+    assert log2.stats["truncated_dropped"] == 1
+    assert log2.last_index == 3
+    assert log2.log(rec(oid=7)) == 4                  # append after recovery
+    log2.close()
+    log3 = Llog("mdt0", path=p)                       # second restart
+    assert log3.last_index == 4                       # record 4 survived
+    assert [R.unpack(b).index for b in log3.read(1, 10)] == [1, 2, 3, 4]
+    log3.close()

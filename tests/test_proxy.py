@@ -240,51 +240,99 @@ def test_late_producer_registration():
     assert {pid for pid, _ in got} == {"mdt0", "mdt9"}
 
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+def test_fetch_and_ack_unknown_consumer_error_is_clear():
+    """Satellite regression: unknown/unsubscribed consumer ids raise a
+    KeyError that names the consumer, not an opaque dict lookup."""
+    proxy, logs = mk_proxy(1)
+    with pytest.raises(KeyError, match="unknown or unsubscribed.*nope"):
+        proxy.fetch("nope")
+    with pytest.raises(KeyError, match="unknown or unsubscribed.*nope"):
+        proxy.ack("nope", "mdt0", 1)
+    with pytest.raises(KeyError, match="unknown or unsubscribed.*nope"):
+        proxy.fetch_batches("nope")
+    with pytest.raises(KeyError, match="unknown or unsubscribed.*nope"):
+        proxy.ack_batch("nope", "mdt0", [1])
+    r = LocalReader(proxy, "g")
+    r.close()
+    with pytest.raises(KeyError, match="unknown or unsubscribed"):
+        proxy.fetch(r.cid)
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    n_producers=st.integers(1, 3),
-    n_groups=st.integers(1, 3),
-    members_per_group=st.integers(1, 3),
-    n_records=st.integers(0, 40),
-    fail_one=st.booleans(),
-)
-def test_property_exactly_once_per_group_and_full_trim(
-        n_producers, n_groups, members_per_group, n_records, fail_one):
-    """System invariants under random topologies: (1) every group sees
-    every record exactly once (at-least-once collapses to exactly-once
-    when consumers ack everything they fetch); (2) after all acks every
-    journal is fully trimmed; (3) a mid-stream consumer failure never
-    loses records."""
-    proxy, logs = mk_proxy(n_producers)
-    groups = {f"g{gi}": [LocalReader(proxy, f"g{gi}")
-                         for _ in range(members_per_group)]
-              for gi in range(n_groups)}
-    feed(logs, n_records)
+def test_batch_fetch_and_batch_ack_roundtrip():
+    """fetch_batches returns per-producer RecordBatches; ack_batch
+    acknowledges a whole batch and propagates the collective watermark."""
+    proxy, logs = mk_proxy(2)
+    r = LocalReader(proxy, "g")
+    feed(logs, 10)
     proxy.pump()
-    if fail_one and n_records and members_per_group > 1:
-        groups["g0"][0].close(failed=True)
-        groups["g0"] = groups["g0"][1:]
-    seen = {g: [] for g in groups}
-    for _ in range(200):
-        moved = 0
-        for g, readers in groups.items():
-            for r in readers:
-                for pid, rec in r.fetch(64):
-                    seen[g].append((pid, rec.index))
-                    r.ack(pid, rec.index)
-                    moved += 1
-        proxy.pump()
-        proxy.flush_upstream()
-        if not moved and all(len(s) >= n_producers * n_records
-                             for s in seen.values()):
+    total = 0
+    while True:
+        batches = r.fetch_batches(64)
+        if not batches:
             break
-    expect = {(f"mdt{p}", i) for p in range(n_producers)
-              for i in range(1, n_records + 1)}
-    for g, s in seen.items():
-        assert sorted(s) == sorted(expect), g      # exactly once per group
-    for log in logs.values():
-        assert log.first_index == log.last_index + 1   # fully trimmed
+        for pid, batch in batches:
+            assert isinstance(batch, R.RecordBatch)
+            total += len(batch)
+            r.ack_batch(pid, batch.indices())
+    assert total == 20
+    assert all(log.first_index == 11 for log in logs.values())
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if not HAVE_HYPOTHESIS:                   # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_exactly_once_per_group_and_full_trim():
+        ...
+
+else:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        n_producers=st.integers(1, 3),
+        n_groups=st.integers(1, 3),
+        members_per_group=st.integers(1, 3),
+        n_records=st.integers(0, 40),
+        fail_one=st.booleans(),
+    )
+    def test_property_exactly_once_per_group_and_full_trim(
+            n_producers, n_groups, members_per_group, n_records, fail_one):
+        """System invariants under random topologies: (1) every group sees
+        every record exactly once (at-least-once collapses to exactly-once
+        when consumers ack everything they fetch); (2) after all acks every
+        journal is fully trimmed; (3) a mid-stream consumer failure never
+        loses records."""
+        proxy, logs = mk_proxy(n_producers)
+        groups = {f"g{gi}": [LocalReader(proxy, f"g{gi}")
+                             for _ in range(members_per_group)]
+                  for gi in range(n_groups)}
+        feed(logs, n_records)
+        proxy.pump()
+        if fail_one and n_records and members_per_group > 1:
+            groups["g0"][0].close(failed=True)
+            groups["g0"] = groups["g0"][1:]
+        seen = {g: [] for g in groups}
+        for _ in range(200):
+            moved = 0
+            for g, readers in groups.items():
+                for r in readers:
+                    for pid, rec in r.fetch(64):
+                        seen[g].append((pid, rec.index))
+                        r.ack(pid, rec.index)
+                        moved += 1
+            proxy.pump()
+            proxy.flush_upstream()
+            if not moved and all(len(s) >= n_producers * n_records
+                                 for s in seen.values()):
+                break
+        expect = {(f"mdt{p}", i) for p in range(n_producers)
+                  for i in range(1, n_records + 1)}
+        for g, s in seen.items():
+            assert sorted(s) == sorted(expect), g  # exactly once per group
+        for log in logs.values():
+            assert log.first_index == log.last_index + 1   # fully trimmed
