@@ -1,13 +1,16 @@
-"""LCAP demo — the paper's system end to end, over TCP:
+"""LCAP demo — the unified Session API end to end, over TCP:
 
 - 3 producers (simulated MDTs / training hosts) journal filesystem-style
   and training events;
-- the LCAP service aggregates them (greedy batched reads) and publishes
-  to two persistent consumer GROUPS (load-balanced within each) plus an
-  EPHEMERAL observer that attaches mid-stream;
-- compensating creat/unlink pairs are compacted by a proxy module;
-- collective acknowledgement trims the producer journals only when both
-  groups acked.
+- the LCAP service aggregates them and publishes to declarative
+  subscriptions: a load-balanced *metrics* group consuming everything, a
+  *durable* checkpoint auditor with an op-type mask pushed down to the
+  proxy (CKPT_WRITE records only — nothing else is ever copied into its
+  outbox), and an EPHEMERAL dashboard that attaches mid-stream;
+- the durable auditor crashes mid-flight and resumes under the same
+  name at its exact ack cursor — no group-wide redelivery storm;
+- collective acknowledgement trims the producer journals only when
+  every group acked.
 
     PYTHONPATH=src python examples/lcap_tracking_demo.py
 """
@@ -15,65 +18,78 @@
 import time
 
 from repro.core import records as R
-from repro.core.llog import Llog
-from repro.core.modules import CancelCompensating
 from repro.core.proxy import LcapProxy
-from repro.core.reader import RemoteReader
 from repro.core.server import LcapService
+from repro.core.session import Subscription, connect
 from repro.track import ActivityTracker
 
 
 def main() -> None:
     trackers = [ActivityTracker(run_id=7, host_id=h, jobid=f"demo-job-{h}")
                 for h in range(3)]
-    proxy = LcapProxy({t.llog.producer_id: t.llog for t in trackers},
-                      modules=[CancelCompensating()])
+    proxy = LcapProxy({t.llog.producer_id: t.llog for t in trackers})
     svc = LcapService(proxy).start()
     print(f"LCAP service on {svc.address}")
 
-    # persistent groups: 2x metrics + 1x audit; ephemeral: dashboard
-    metrics = [RemoteReader(svc.address, "metrics") for _ in range(2)]
-    audit = RemoteReader(svc.address, "audit")
+    # one Session per consumer process; declarative subscriptions on it
+    metric_sessions = [connect(svc.address) for _ in range(2)]
+    metrics = [s.subscribe("metrics")
+               for s in metric_sessions]               # load-balanced group
+    audit_session = connect(svc.address)
+    audit = audit_session.subscribe(Subscription(
+        group="ckpt-audit", name="auditor-0",          # durable identity
+        types={R.CL_CKPT_WRITE},                       # op-type pushdown
+        flags=R.CLF_JOBID | R.CLF_XATTR))              # field projection
 
     for step in range(3):
         for t in trackers:
             t.step_commit(step, loss=2.0 - 0.3 * step, step_time_s=0.1,
                           tokens=4096)
-    # compensating pair -> compacted by the module, never delivered
-    trackers[0].fs_op(R.CL_CREATE, oid=99, name=b"scratch.tmp")
-    trackers[0].fs_op(R.CL_UNLINK, oid=99, name=b"scratch.tmp")
+            t.ckpt_write(step, shard_id=t.host_id, nbytes=1 << 20,
+                         path=f"/ckpt/s{t.host_id}", total_shards=3)
 
-    dashboard = RemoteReader(svc.address, None, mode="ephemeral")
-    trackers[1].heartbeat(3, step_time_s=0.12)   # emitted after attach
+    dash_session = connect(svc.address)
+    dashboard = dash_session.subscribe(mode="ephemeral")
+    trackers[1].heartbeat(3, step_time_s=0.12)         # emitted after attach
 
     time.sleep(0.3)
-    got_m = [m.fetch(100) for m in metrics]
-    got_a = audit.fetch(100)
-    got_d = dashboard.fetch(100)
+    got_m = [list(m) for m in metrics]                 # iterate = auto-commit
+    print(f"metrics group: {sum(len(b) for _, b in got_m[0])} + "
+          f"{sum(len(b) for _, b in got_m[1])} records (load-balanced)")
 
-    print(f"metrics group: {len(got_m[0])} + {len(got_m[1])} records "
-          f"(load-balanced, total {len(got_m[0]) + len(got_m[1])})")
-    print(f"audit group:   {len(got_a)} records (same stream, own copy)")
-    print(f"ephemeral dashboard: {len(got_d)} records (no history)")
-    assert len(got_d) < len(got_a), "ephemeral reader must miss history"
+    # the durable auditor consumes part of its filtered stream, commits
+    # it, fetches more without committing, then crashes mid-flight
+    early = audit.fetch(3)
+    audit.commit()
+    unacked = audit.fetch(100)
+    total = sum(len(b) for _, b in early + unacked)
+    print(f"auditor got {total} CKPT_WRITE records (proxy filtered "
+          f"everything else: filtered_out={proxy.stats['filtered_out']})")
+    audit.close(failed=True)                           # socket drops, no bye
+    time.sleep(0.1)
 
-    for pid, rec in got_m[0]:
-        metrics[0].ack(pid, rec.index)
-    for pid, rec in got_m[1]:
-        metrics[1].ack(pid, rec.index)
-    time.sleep(0.2)
+    # ...and resumes under the same durable name: only its own unacked
+    # records are replayed, the metrics group never sees a redelivery
+    resume_session = connect(svc.address)
+    resumed = resume_session.resume("ckpt-audit", "auditor-0")
+    replay = [idx for _, b in resumed.fetch(100) for idx in b.indices()]
+    print(f"resumed at cursor {resumed.resume_token}; replayed "
+          f"{len(replay)} unacked records; group redeliveries: "
+          f"{proxy.stats['redelivered']}")
+    resumed.commit()
+
+    got_d = list(dashboard)
+    print(f"ephemeral dashboard: {sum(len(b) for _, b in got_d)} records "
+          f"(no history)")
+
+    time.sleep(0.3)
     first = trackers[0].llog.first_index
-    print(f"after metrics-only acks, journal trim point: {first} "
-          f"(audit group still owes acks)")
-    for pid, rec in got_a:
-        audit.ack(pid, rec.index)
-    time.sleep(0.3)
-    print(f"after audit acks too, journal trimmed to: "
-          f"{trackers[0].llog.first_index}..{trackers[0].llog.last_index}")
+    last = trackers[0].llog.last_index
+    print(f"journals after both groups acked: trimmed to {first}..{last}")
     print(f"proxy stats: {proxy.stats}")
 
-    for r in (*metrics, audit, dashboard):
-        r.close()
+    for s in (*metric_sessions, resume_session, dash_session):
+        s.close()                       # releases consumers + connections
     svc.stop()
     print("OK")
 

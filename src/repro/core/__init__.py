@@ -9,6 +9,8 @@ at-least-once delivery, ephemeral readers and stream modules.
 
 from . import records
 from .ack import AckTracker
+from .errors import (SessionError, SubscriptionError,
+                     UnknownConsumerError, UnknownProducerError)
 from .llog import Llog
 from .modules import (CancelCompensating, CoalesceHeartbeats,
                       ReorderByTarget, TypeFilter)
@@ -16,10 +18,15 @@ from .proxy import EPHEMERAL, PERSISTENT, LcapProxy
 from .reader import LocalReader, RemoteReader
 from .records import RecordBatch
 from .server import LcapService
+from .session import Session, Stream, Subscription, connect
 
 __all__ = [
     "records", "RecordBatch", "AckTracker", "Llog", "LcapProxy",
-    "LcapService", "LocalReader", "RemoteReader", "PERSISTENT", "EPHEMERAL",
+    "LcapService", "PERSISTENT", "EPHEMERAL",
+    "connect", "Session", "Stream", "Subscription",
+    "SessionError", "SubscriptionError", "UnknownConsumerError",
+    "UnknownProducerError",
+    "LocalReader", "RemoteReader",        # deprecated shims
     "CancelCompensating", "CoalesceHeartbeats", "ReorderByTarget",
     "TypeFilter",
 ]

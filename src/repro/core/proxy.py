@@ -25,6 +25,18 @@ only when placed in a consumer's outbox; per-consumer flag remapping
 uses the plan cache in ``records`` and is a no-op for consumers that
 ask for everything.
 
+Subscriptions may carry an **op-type mask** in addition to the §IV-A
+flag projection; both are enforced here at dispatch (server-side filter
+pushdown): a record no subscriber asked for is acknowledged in place —
+never materialized, never copied into an outbox.  Consumers that name a
+**durable identity** (``name=``) survive disconnects: the proxy parks
+their unacknowledged records and per-producer ack watermark under
+``(group, name)`` for ``resume_ttl`` seconds, and a reconnecting
+consumer under the same name resumes exactly at its cursor (its own
+unacked records are replayed to it alone — no group-wide redelivery
+storm).  Only when the park expires is the backlog redelivered to the
+surviving members.
+
 The core is synchronous (``pump()``) for determinism; ``LcapService``
 (server.py) wraps it with a polling thread + TCP transport.
 """
@@ -34,11 +46,14 @@ from __future__ import annotations
 import itertools
 import operator
 import threading
+import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import (Callable, Deque, Dict, Iterable, List, Optional, Tuple)
 
 from . import records as R
 from .ack import AckTracker
+from .errors import (SubscriptionError, UnknownConsumerError,
+                     UnknownProducerError)
 from .llog import Llog
 
 Module = Callable[[R.RecordBatch], R.RecordBatch]
@@ -50,20 +65,28 @@ _by_load = operator.attrgetter("load")   # Consumer.load, single definition
 
 
 class Consumer:
-    def __init__(self, cid: str, group: Optional[str], flags: int, mode: str):
+    def __init__(self, cid: str, group: Optional[str], flags: int, mode: str,
+                 types: Optional[Iterable[int]] = None,
+                 name: Optional[str] = None):
         self.cid = cid
         self.group = group
-        self.flags = flags & R.CLF_SUPPORTED
+        self.flags = R.normalize_flags(flags)
         self.mode = mode
+        self.types = frozenset(types) if types is not None else None
+        self.name = name                     # durable identity within group
         self.outbox: Deque[Tuple[str, int, bytes]] = deque()
         # (producer, index) -> packed record, for redelivery
         self.in_flight: Dict[Tuple[str, int], bytes] = {}
+        self.acked_hi: Dict[str, int] = {}   # pid -> highest acked index
         self.alive = True
         self.delivered = 0
 
     @property
     def load(self) -> int:
         return len(self.outbox) + len(self.in_flight)
+
+    def wants(self, rtype: int) -> bool:
+        return self.types is None or rtype in self.types
 
 
 class Group:
@@ -72,6 +95,8 @@ class Group:
         self.members: Dict[str, Consumer] = {}
         self.trackers: Dict[str, AckTracker] = {}
         self.pending: Deque[Tuple[str, int, bytes]] = deque()  # no member yet
+        self.durable: Dict[str, str] = {}    # durable name -> active cid
+        self.parked: Dict[str, Tuple[Consumer, float]] = {}  # name -> deadline
 
     def tracker(self, pid: str) -> AckTracker:
         if pid not in self.trackers:
@@ -83,12 +108,13 @@ class LcapProxy:
     def __init__(self, producers: Dict[str, Llog],
                  modules: Optional[List[Module]] = None,
                  batch_size: int = 1024, max_buffer: int = 1 << 20,
-                 outbox_cap: int = 1 << 16):
+                 outbox_cap: int = 1 << 16, resume_ttl: float = 30.0):
         self.producers = dict(producers)
         self.modules = list(modules or [])
         self.batch_size = batch_size
         self.max_buffer = max_buffer          # records, across buffered batches
         self.outbox_cap = outbox_cap
+        self.resume_ttl = resume_ttl          # durable park window (seconds)
         self._lock = threading.RLock()
         self._cid_seq = itertools.count(1)
         # register as a regular changelog reader with every producer (§III)
@@ -106,7 +132,9 @@ class LcapProxy:
         self._buffered = 0                    # records currently in _buffer
         self.stats = {"ingested": 0, "dispatched": 0, "dropped_by_modules": 0,
                       "redelivered": 0, "acked_upstream": 0,
-                      "ephemeral_drops": 0, "batches_ingested": 0}
+                      "ephemeral_drops": 0, "batches_ingested": 0,
+                      "filtered_out": 0, "parked": 0, "resumed": 0,
+                      "resume_replayed": 0, "parks_expired": 0}
 
     # ------------------------------------------------------------------ API
     def add_producer(self, pid: str, log: Llog) -> None:
@@ -118,27 +146,76 @@ class LcapProxy:
             self.ingested[pid] = log.first_index - 1
             self.upstream_acked[pid] = self.ingested[pid]
 
-    def subscribe(self, group: Optional[str], flags: int = R.CLF_SUPPORTED,
-                  mode: str = PERSISTENT, cid: Optional[str] = None) -> str:
-        """Register a consumer.  Persistent consumers name a group and
-        share its stream; ephemeral consumers pass ``mode=EPHEMERAL``
-        (group may be None) and only see records ingested afterwards."""
+    def subscribe(self, group: Optional[str], flags: Optional[int] = None,
+                  mode: str = PERSISTENT, cid: Optional[str] = None,
+                  types: Optional[Iterable[int]] = None,
+                  name: Optional[str] = None) -> str:
+        """Register a consumer; returns its cid.  See ``attach`` for the
+        full subscription contract (this is the thin historical form)."""
+        return self.attach(group, flags=flags, mode=mode, cid=cid,
+                           types=types, name=name)["cid"]
+
+    def attach(self, group: Optional[str], flags: Optional[int] = None,
+               mode: str = PERSISTENT, cid: Optional[str] = None,
+               types: Optional[Iterable[int]] = None,
+               name: Optional[str] = None,
+               resume: Optional[bool] = None) -> Dict:
+        """Register a consumer and return ``{"cid", "resumed", "token"}``.
+
+        Persistent consumers name a group and share its stream; ephemeral
+        consumers pass ``mode=EPHEMERAL`` (group may be None) and only see
+        records ingested afterwards.  ``flags`` is the §IV-A field
+        projection (None = everything supported; unknown bits are masked
+        here, the single enforcement point) and ``types`` the op-type
+        mask — both pushed down to dispatch.  Masks are evaluated
+        against the *live* membership at dispatch/redelivery time: a
+        record no live member asks for is acknowledged in place, so
+        groups that care about completeness should keep member masks
+        homogeneous.  ``name`` makes a persistent consumer durable: if
+        parked state exists under ``(group, name)`` the consumer
+        resumes at its ack cursor, inheriting the parked flags/types
+        unless new ones are passed (``resume=True`` demands that state
+        exists, ``resume=False`` forbids using it).  The returned
+        ``token`` maps producer -> highest acked index.
+        """
         with self._lock:
+            self._expire_parked_locked()
+            if resume and not name:
+                raise SubscriptionError("resume requires a durable "
+                                        "consumer name")
             cid = cid or f"c{next(self._cid_seq)}"
             if cid in self.consumers:
-                raise ValueError(f"consumer {cid} exists")
+                raise SubscriptionError(f"consumer {cid} exists")
             if mode == PERSISTENT:
                 if not group:
-                    raise ValueError("persistent consumers need a group")
-                cons = Consumer(cid, group, flags, mode)
+                    raise SubscriptionError("persistent consumers need a "
+                                            "group")
                 grp = self.groups.setdefault(group, Group(group))
-                grp.members[cid] = cons
-                # drain records parked while the group had no members
-                while grp.pending:
-                    pid, idx, buf = grp.pending.popleft()
-                    self._hand_to(cons, pid, idx, buf)
+                if name:
+                    if name in grp.durable:
+                        raise SubscriptionError(
+                            f"durable consumer {group}/{name} is already "
+                            f"attached as {grp.durable[name]}")
+                    if name in grp.parked:
+                        if resume is False:
+                            raise SubscriptionError(
+                                f"durable consumer {group}/{name} has "
+                                f"parked state; resume or forget it first")
+                        return self._resume_locked(grp, name, cid, flags,
+                                                   types)
+                if resume:
+                    raise UnknownConsumerError(
+                        f"no parked state for durable consumer "
+                        f"{group}/{name!r}")
+                cons = Consumer(cid, group, flags, mode, types=types,
+                                name=name)
+                self._join_group(grp, cons)
+                self._flush_upstream_locked()   # drain may ack in place
             elif mode == EPHEMERAL:
-                cons = Consumer(cid, None, flags, mode)
+                if name:
+                    raise SubscriptionError("ephemeral consumers cannot be "
+                                            "durable")
+                cons = Consumer(cid, None, flags, mode, types=types)
                 # connection point: nothing *emitted* before now (§IV-B).
                 # Producer last_index, not the ingest cursor — records
                 # journaled but not yet pumped at attach time are
@@ -147,13 +224,61 @@ class LcapProxy:
                     pid: log.last_index
                     for pid, log in self.producers.items()}
             else:
-                raise ValueError(f"unknown mode {mode}")
+                raise SubscriptionError(f"unknown mode {mode}")
             self.consumers[cid] = cons
-            return cid
+            return {"cid": cid, "resumed": False, "flags": cons.flags,
+                    "token": dict(cons.acked_hi)}
+
+    def _join_group(self, grp: Group, cons: Consumer) -> None:
+        grp.members[cons.cid] = cons
+        if cons.name:
+            grp.durable[cons.name] = cons.cid
+        # drain records parked while the group had no members through
+        # normal group dispatch (deliver is a dedup no-op).  The batch
+        # hot loop in _dispatch inlines this same policy — keep the two
+        # in step when changing either.
+        pending, grp.pending = grp.pending, deque()
+        for pid, idx, buf in pending:
+            self._dispatch_to_group(grp, pid, idx, buf)
+
+    def _resume_locked(self, grp: Group, name: str, cid: str,
+                       flags: Optional[int],
+                       types: Optional[Iterable[int]]) -> Dict:
+        old, _deadline = grp.parked.pop(name)
+        # the parked subscription spec is the default: a bare
+        # resume(group, name) keeps the filters the consumer declared;
+        # passing flags/types explicitly overrides them
+        cons = Consumer(cid, grp.name,
+                        old.flags if flags is None else flags,
+                        PERSISTENT,
+                        types=old.types if types is None else types,
+                        name=name)
+        cons.acked_hi = old.acked_hi
+        # exact cursor resume: everything the old incarnation had not
+        # acked is replayed to the resuming consumer alone — the group
+        # never sees a redelivery storm.  Records an explicitly
+        # narrowed type mask no longer covers go back through group
+        # dispatch instead (another member that wants them, or acked in
+        # place) — cons is not yet a member, so it cannot get them.
+        replayed = 0
+        for (pid, idx), buf in sorted(old.in_flight.items()):
+            if cons.wants(R.packed_type(buf)):
+                self._hand_to(cons, pid, idx, buf)
+                replayed += 1
+            else:
+                self._dispatch_to_group(grp, pid, idx, buf)
+        self.stats["resumed"] += 1
+        self.stats["resume_replayed"] += replayed
+        self._join_group(grp, cons)
+        self.consumers[cid] = cons
+        self._flush_upstream_locked()       # narrowing may ack in place
+        return {"cid": cid, "resumed": True, "flags": cons.flags,
+                "token": dict(cons.acked_hi)}
 
     def unsubscribe(self, cid: str, failed: bool = False) -> None:
-        """Remove a consumer.  Its undelivered/unacked records go back to
-        the group (at-least-once)."""
+        """Remove a consumer for good (durable state included).  Its
+        undelivered/unacked records go back to the group
+        (at-least-once)."""
         with self._lock:
             cons = self.consumers.pop(cid, None)
             if cons is None:
@@ -163,24 +288,85 @@ class LcapProxy:
                 return
             grp = self.groups[cons.group]
             del grp.members[cid]
+            if cons.name:
+                grp.durable.pop(cons.name, None)
             # in_flight covers everything undelivered OR unacked (records
             # are tracked there from dispatch until ack), so it alone is
             # the redelivery backlog — using outbox too would duplicate
             # queued-but-unfetched records.
-            backlog = sorted(
-                (pid, idx, buf) for (pid, idx), buf in cons.in_flight.items())
-            self.stats["redelivered"] += len(backlog)
-            for pid, idx, buf in backlog:
-                self._dispatch_to_group(grp, pid, idx, buf)
+            self._redeliver(grp, cons)
+            self._flush_upstream_locked()   # redelivery may ack in place
+
+    def _redeliver(self, grp: Group, cons: Consumer) -> None:
+        backlog = sorted(
+            (pid, idx, buf) for (pid, idx), buf in cons.in_flight.items())
+        self.stats["redelivered"] += len(backlog)
+        for pid, idx, buf in backlog:
+            self._dispatch_to_group(grp, pid, idx, buf)
 
     fail = lambda self, cid: self.unsubscribe(cid, failed=True)  # noqa: E731
+
+    def disconnect(self, cid: str) -> None:
+        """A consumer's connection went away without a clean close.
+        Durable consumers are parked: their unacked records and ack
+        cursor wait ``resume_ttl`` seconds under ``(group, name)`` for
+        the same name to reconnect.  Anonymous consumers fail
+        immediately (backlog redelivered to the group)."""
+        with self._lock:
+            cons = self.consumers.get(cid)
+            if cons is None:
+                return
+            if cons.mode == EPHEMERAL or not cons.name:
+                self.unsubscribe(cid, failed=True)
+                return
+            del self.consumers[cid]
+            cons.alive = False
+            grp = self.groups[cons.group]
+            del grp.members[cid]
+            grp.durable.pop(cons.name, None)
+            grp.parked[cons.name] = (cons, self._now() + self.resume_ttl)
+            self.stats["parked"] += 1
+
+    def forget(self, group: str, name: str) -> None:
+        """Drop a parked durable consumer without waiting for its TTL;
+        its backlog is redelivered to the surviving members."""
+        with self._lock:
+            grp = self.groups.get(group)
+            if grp is None or name not in grp.parked:
+                raise UnknownConsumerError(
+                    f"no parked state for durable consumer {group}/{name!r}")
+            cons, _ = grp.parked.pop(name)
+            self._redeliver(grp, cons)
+            self._flush_upstream_locked()   # redelivery may ack in place
+
+    _now = staticmethod(time.monotonic)
+
+    def _expire_parked_locked(self) -> None:
+        now = self._now()
+        expired = False
+        for grp in self.groups.values():
+            if not grp.parked:
+                continue
+            for name in [n for n, (_, dl) in grp.parked.items() if dl <= now]:
+                cons, _ = grp.parked.pop(name)
+                self.stats["parks_expired"] += 1
+                self._redeliver(grp, cons)
+                expired = True
+        if expired:
+            self._flush_upstream_locked()   # redelivery may ack in place
+
+    def expire_parked(self) -> None:
+        """Redeliver the backlog of parked durable consumers whose
+        resume window has lapsed (also runs on every ``pump``)."""
+        with self._lock:
+            self._expire_parked_locked()
 
     def _consumer(self, cid: str) -> Consumer:
         try:
             return self.consumers[cid]
         except KeyError:
-            raise KeyError(f"unknown or unsubscribed consumer {cid!r}") \
-                from None
+            raise UnknownConsumerError(
+                f"unknown or unsubscribed consumer {cid!r}") from None
 
     # ------------------------------------------------------------- ingest
     def _ingest(self) -> int:
@@ -226,7 +412,12 @@ class LcapProxy:
         if not live:
             grp.pending.append((pid, idx, buf))
             return
-        cons = min(live, key=lambda m: m.load)   # least-loaded (§III-A)
+        want = [m for m in live if m.wants(R.packed_type(buf))]
+        if not want:                             # pushdown: nobody asked
+            grp.tracker(pid).ack(idx)
+            self.stats["filtered_out"] += 1
+            return
+        cons = min(want, key=_by_load)           # least-loaded (§III-A)
         self._hand_to(cons, pid, idx, buf)
 
     def _dispatch(self) -> int:
@@ -254,29 +445,56 @@ class LcapProxy:
             return buf if want == src else remap(buf, want)
 
         dispatched = 0
+        filtered_out = 0
         while self._buffer:
             pid, batch = self._buffer.popleft()
             self._buffered -= len(batch)
             # per-(batch, group) state — membership cannot change while
-            # the proxy lock is held
-            states = [(g, g.tracker(pid),
-                       [m for m in g.members.values() if m.alive])
-                      for g in groups]
+            # the proxy lock is held: (group, tracker, live members,
+            # pushdown active, rtype -> eligible-members cache)
+            states = []
+            for g in groups:
+                live = [m for m in g.members.values() if m.alive]
+                states.append((g, g.tracker(pid), live,
+                               any(m.types is not None for m in live), {}))
+            need_type = any(filt for _g, _t, _l, filt, _c in states) or \
+                any(c.types is not None for c in ephemerals)
             packed_index = batch.packed_index
+            packed_type = batch.packed_type
             packed = batch.packed
             total = len(batch)
             stop = None
             for i in range(total):
                 idx = packed_index(i)
-                buf = packed(i) if (states or ephemerals) else None
+                rtype = packed_type(i) if need_type else -1
+                # pushdown means a record may reach no outbox at all:
+                # materialize the packed bytes only on first real use
+                buf = None
                 full = False
-                for grp, tracker, live in states:
+                for grp, tracker, live, filtered, eligible in states:
                     tracker.deliver(idx)
                     if not live:
+                        if buf is None:
+                            buf = packed(i)
                         grp.pending.append((pid, idx, buf))
                         continue
-                    cons = live[0] if len(live) == 1 else min(live,
+                    if filtered:
+                        want = eligible.get(rtype)
+                        if want is None:
+                            want = eligible[rtype] = \
+                                [m for m in live if m.wants(rtype)]
+                        if not want:
+                            # nobody in this group asked for this op
+                            # type: acknowledged in place, never copied
+                            tracker.ack(idx)
+                            filtered_out += 1
+                            continue
+                    else:
+                        want = live
+                    cons = want[0] if len(want) == 1 else min(want,
                                                               key=by_load)
+                    if buf is None:
+                        buf = packed(i)
                     cons.outbox.append((pid, idx, stamp(cons, buf)))
                     cons.in_flight[(pid, idx)] = buf
                     cons.delivered += 1
@@ -286,9 +504,13 @@ class LcapProxy:
                 for cons in ephemerals:
                     if idx <= cons.since.get(pid, -1):  # type: ignore
                         continue  # emitted before connection (§IV-B)
+                    if not cons.wants(rtype):
+                        continue  # pushdown for ephemerals: just skip
                     if len(cons.outbox) >= cap:
                         self.stats["ephemeral_drops"] += 1   # radio semantics
                         continue
+                    if buf is None:
+                        buf = packed(i)
                     cons.outbox.append((pid, idx, stamp(cons, buf)))
                 n += 1
                 if full:
@@ -302,13 +524,21 @@ class LcapProxy:
                     self._buffered += len(rest)
                 break
         self.stats["dispatched"] += dispatched
+        self.stats["filtered_out"] += filtered_out
         return n
 
     def pump(self) -> int:
         """One synchronous ingest+dispatch cycle; returns records moved."""
         with self._lock:
+            self._expire_parked_locked()
+            filtered_before = self.stats["filtered_out"]
             a = self._ingest()
             b = self._dispatch()
+            if self.stats["filtered_out"] != filtered_before:
+                # in-place acks (pushdown) can complete a producer's
+                # collective watermark without any consumer commit —
+                # propagate, or a fully-filtered journal never trims
+                self._flush_upstream_locked()
             return a + b
 
     # -------------------------------------------------------------- fetch
@@ -341,28 +571,38 @@ class LcapProxy:
 
     # ---------------------------------------------------------------- ack
     def ack(self, cid: str, pid: str, index: int) -> None:
-        with self._lock:
-            cons = self._consumer(cid)
-            if cons.mode == EPHEMERAL:
-                return  # ephemeral readers are not expected to ack (§IV-B)
-            cons.in_flight.pop((pid, index), None)
-            grp = self.groups[cons.group]
-            grp.tracker(pid).ack(index)
-            self._ack_upstream(pid)
+        self.commit(cid, {pid: (index,)})
 
     def ack_batch(self, cid: str, pid: str, indices: List[int]) -> None:
         """Acknowledge many records of one producer under a single lock
         acquisition and a single upstream-watermark propagation."""
+        self.commit(cid, {pid: indices})
+
+    def commit(self, cid: str, acks: Dict[str, Iterable[int]]) -> None:
+        """Acknowledge records of any number of producers in one call
+        (one lock acquisition, one upstream propagation per producer).
+        Also advances the consumer's durable ack watermark — the cursor
+        a resuming consumer of the same name picks up."""
         with self._lock:
             cons = self._consumer(cid)
-            if cons.mode == EPHEMERAL or not indices:
-                return
+            if cons.mode == EPHEMERAL:
+                return  # ephemeral readers are not expected to ack (§IV-B)
             grp = self.groups[cons.group]
-            pop = cons.in_flight.pop
-            for index in indices:
-                pop((pid, index), None)
-            grp.tracker(pid).ack_many(indices)
-            self._ack_upstream(pid)
+            for pid in acks:               # validate first: all or nothing
+                if pid not in self.producers:
+                    raise UnknownProducerError(f"unknown producer {pid!r}")
+            for pid, indices in acks.items():
+                indices = list(indices)
+                if not indices:
+                    continue
+                pop = cons.in_flight.pop
+                for index in indices:
+                    pop((pid, index), None)
+                hi = max(indices)
+                if hi > cons.acked_hi.get(pid, 0):
+                    cons.acked_hi[pid] = hi
+                grp.tracker(pid).ack_many(indices)
+                self._ack_upstream(pid)
 
     def _group_position(self, grp: Group, pid: str) -> int:
         tr = grp.tracker(pid)
@@ -382,9 +622,12 @@ class LcapProxy:
             self.upstream_acked[pid] = horizon
             self.stats["acked_upstream"] += 1
 
+    def _flush_upstream_locked(self) -> None:
+        for pid in self.producers:
+            self._ack_upstream(pid)
+
     def flush_upstream(self) -> None:
         """Propagate collective acks for producers with no outstanding
         records (e.g. after module-dropped batches)."""
         with self._lock:
-            for pid in self.producers:
-                self._ack_upstream(pid)
+            self._flush_upstream_locked()

@@ -1,24 +1,17 @@
-"""Changelog consumer client API (paper §II's four-phase loop).
+"""DEPRECATED changelog reader shims — use ``session.connect`` instead.
 
-    1) start (register with a group / as ephemeral, express flags)
-    2) receive/consume records
-    3) acknowledge (may be delayed and batched)
-    4) stop (deregister)
+``LocalReader``/``RemoteReader`` were the seed's split consumer
+bindings (paper §II's four-phase loop as raw plumbing: register, fetch,
+ack, stop).  They survive as thin shims over the one ``Session``
+backend so existing callers keep working, but new code should speak the
+declarative API:
 
-Two bindings share one interface:
-- ``LocalReader`` talks to an in-process ``LcapProxy``;
-- ``RemoteReader`` talks to an ``LcapService`` over TCP (server.py).
+    session = connect(proxy_or_address)
+    stream = session.subscribe(group, flags=..., types=...)
 
-Both move whole ``RecordBatch``es: ``fetch_batches()`` returns
-``(producer, RecordBatch)`` pairs (one wire frame per batch for the
-remote binding), and ``fetch()`` is the record-level convenience view
-over the same path.  ``ack_batch()`` acknowledges a whole batch in one
-call/RPC.
-
-The client performs the *local* half of record remapping: fields the
-consumer requested but the record (as stripped by the proxy) does not
-carry are zero-filled locally (§IV-A) — per batch, through the remap
-plan cache.
+See ``session.py`` for the subscription contract (durable consumers,
+op-type pushdown, auto-committing streams) and ARCHITECTURE.md for the
+old-call -> new-call migration table.
 """
 
 from __future__ import annotations
@@ -26,99 +19,64 @@ from __future__ import annotations
 from typing import Iterable, List, Optional, Tuple
 
 from . import records as R
-from .proxy import EPHEMERAL, PERSISTENT, LcapProxy
-from .transport import RpcClient
+from .proxy import EPHEMERAL, PERSISTENT, LcapProxy  # noqa: F401 (re-export)
+from .session import Subscription, connect
 
 
-class _Base:
-    flags: int
+class _ReaderShim:
+    """Shared deprecated reader surface over a Session backend."""
 
-    def _remap_local(self, batch: R.RecordBatch) -> R.RecordBatch:
-        # local remap: add (zero-fill) missing requested fields
-        return batch.remap(self.flags)
+    def __init__(self, target, group: Optional[str], flags: Optional[int],
+                 mode: str):
+        self._session = connect(target)
+        self._backend = self._session._backend
+        self.flags = R.normalize_flags(flags)
+        info = self._backend.attach(
+            Subscription(group=group, mode=mode, flags=flags))
+        self.cid = info["cid"]
+        self.mode = mode
 
-    def _flatten(self, batches: List[Tuple[str, R.RecordBatch]],
-                 ) -> List[Tuple[str, R.ChangelogRecord]]:
-        out = []
-        for pid, batch in batches:
-            for i in range(len(batch)):
-                rec = batch.record(i)
-                out.append((pid, rec))
-        return out
+    def fetch_batches(self, max_records: int = 256,
+                      ) -> List[Tuple[str, R.RecordBatch]]:
+        # local remap: add (zero-fill) missing requested fields (§IV-A)
+        return [(pid, batch.remap(self.flags))
+                for pid, batch in self._backend.fetch(self.cid, max_records)]
 
     # record-level convenience over the batch path ---------------------------
     def fetch(self, max_records: int = 256,
               ) -> List[Tuple[str, R.ChangelogRecord]]:
-        return self._flatten(self.fetch_batches(max_records))
-
-    def fetch_batches(self, max_records: int = 256,
-                      ) -> List[Tuple[str, R.RecordBatch]]:
-        raise NotImplementedError
-
-    def ack_batch(self, pid: str, indices: Iterable[int]) -> None:
-        raise NotImplementedError
-
-
-class LocalReader(_Base):
-    def __init__(self, proxy: LcapProxy, group: Optional[str],
-                 flags: int = R.CLF_SUPPORTED, mode: str = PERSISTENT):
-        self.proxy = proxy
-        self.flags = flags & R.CLF_SUPPORTED
-        self.cid = proxy.subscribe(group, flags, mode)
-        self.mode = mode
-
-    def fetch_batches(self, max_records: int = 256,
-                      ) -> List[Tuple[str, R.RecordBatch]]:
-        return [(pid, self._remap_local(batch))
-                for pid, batch in self.proxy.fetch_batches(self.cid,
-                                                           max_records)]
+        return [(pid, batch.record(i))
+                for pid, batch in self.fetch_batches(max_records)
+                for i in range(len(batch))]
 
     def ack(self, pid: str, index: int) -> None:
-        self.proxy.ack(self.cid, pid, index)
+        self._backend.commit(self.cid, {pid: [index]})
 
     def ack_batch(self, pid: str, indices: Iterable[int]) -> None:
-        self.proxy.ack_batch(self.cid, pid, list(indices))
-
-    def close(self, failed: bool = False) -> None:
-        self.proxy.unsubscribe(self.cid, failed=failed)
-
-
-class RemoteReader(_Base):
-    def __init__(self, address, group: Optional[str],
-                 flags: int = R.CLF_SUPPORTED, mode: str = PERSISTENT):
-        self.rpc = RpcClient(address)
-        self.flags = flags & R.CLF_SUPPORTED
-        reply = self.rpc.call({"op": "register", "group": group,
-                               "flags": self.flags, "mode": mode})
-        if reply.get("err"):
-            raise RuntimeError(reply["err"])
-        self.cid = reply["cid"]
-        self.mode = mode
-
-    def fetch_batches(self, max_records: int = 256,
-                      ) -> List[Tuple[str, R.RecordBatch]]:
-        reply = self.rpc.call({"op": "fetch", "cid": self.cid,
-                               "max": max_records})
-        if reply.get("err"):
-            raise RuntimeError(reply["err"])
-        return [(pid, self._remap_local(R.RecordBatch.from_wire(blob)))
-                for pid, blob in reply["batches"]]
-
-    def ack(self, pid: str, index: int) -> None:
-        self.rpc.call({"op": "ack", "cid": self.cid, "pid": pid,
-                       "index": index})
-
-    def ack_batch(self, pid: str, indices: Iterable[int]) -> None:
-        self.rpc.call({"op": "ack_batch", "cid": self.cid, "pid": pid,
-                       "indices": list(indices)})
+        self._backend.commit(self.cid, {pid: list(indices)})
 
     def close(self, failed: bool = False) -> None:
         if failed:
-            # simulate a crash: drop the socket without deregistering;
-            # the service's disconnect hook triggers redelivery
-            self.rpc.close()
-            return
-        try:
-            self.rpc.call({"op": "close", "cid": self.cid})
-        finally:
-            self.rpc.close()
+            # simulate a crash: the connection just drops; the proxy's
+            # disconnect handling redelivers (or parks durable state)
+            self._backend.crash(self.cid)
+        else:
+            try:
+                self._backend.unsubscribe(self.cid)
+            finally:
+                self._backend.close()
+
+
+class LocalReader(_ReaderShim):
+    def __init__(self, proxy: LcapProxy, group: Optional[str],
+                 flags: Optional[int] = None, mode: str = PERSISTENT):
+        super().__init__(proxy, group, flags, mode)
+        self.proxy = proxy
+
+
+class RemoteReader(_ReaderShim):
+    def __init__(self, address, group: Optional[str],
+                 flags: Optional[int] = None, mode: str = PERSISTENT):
+        # connect() accepts (host, port) and "host:port" alike
+        super().__init__(address, group, flags, mode)
+        self.rpc = self._backend.rpc

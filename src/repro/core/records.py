@@ -294,6 +294,19 @@ def packed_flags(buf: bytes) -> int:
     return struct.unpack_from("<H", buf, 2)[0]
 
 
+def packed_type(buf: bytes) -> int:
+    return struct.unpack_from("<H", buf, 4)[0]
+
+
+def normalize_flags(flags: Optional[int]) -> int:
+    """The single place subscription flag masks are normalized: ``None``
+    means "everything supported", unknown bits are masked off (a newer
+    client talking to this proxy gets the intersection, per §IV-A)."""
+    if flags is None:
+        return CLF_SUPPORTED
+    return flags & CLF_SUPPORTED
+
+
 def remap(buf: bytes, target_flags: int) -> bytes:
     """Remap a *packed* record to ``target_flags`` (paper §IV-A).
 

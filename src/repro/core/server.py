@@ -2,19 +2,38 @@
 
 Wraps ``LcapProxy`` with a greedy polling thread (reads records from the
 producers as soon as possible) and the TCP request/response service the
-``RemoteReader`` client speaks.  A consumer disconnect without ``close``
-is treated as a failure → its in-flight records are redelivered to the
-surviving members of its group (at-least-once, §III-A).
+``Session`` client (session.py) speaks.  Messages are versioned
+(``"v"``); the consumer surface is:
+
+    subscribe   declarative spec (group/name/mode/flags/types) -> cid;
+                transparently resumes a parked durable consumer
+    resume      like subscribe, but demands parked durable state
+    fetch       drain queued records as per-producer batch frames
+    commit      acknowledge batches of records across producers
+    detach      drop the connection but keep the durable identity
+    close       deregister for good
+    stats       proxy counters
+
+plus the legacy ``register``/``ack``/``ack_batch`` verbs for the
+deprecated reader shims.  Errors travel as ``{"err", "err_type"}`` and
+surface client-side as typed exceptions, never strings.
+
+A consumer disconnect without ``close`` is treated as a failure: durable
+consumers are parked for the proxy's resume TTL (reconnecting under the
+same name resumes at the cursor), anonymous consumers' in-flight records
+are redelivered to the surviving members of the group (at-least-once,
+§III-A).
 """
 
 from __future__ import annotations
 
 import threading
 import time
-from typing import Dict, Optional
+from typing import Dict
 
+from .errors import SessionError
 from .proxy import LcapProxy
-from .transport import RpcServer
+from .transport import PROTOCOL_VERSION, RpcServer
 
 
 class LcapService:
@@ -31,11 +50,23 @@ class LcapService:
     def _handle(self, msg: Dict, session: Dict) -> Dict:
         op = msg.get("op")
         try:
-            if op == "register":
+            if msg.get("v", 0) > PROTOCOL_VERSION:
+                raise SessionError(f"protocol version {msg['v']} not "
+                                   f"supported (server speaks "
+                                   f"{PROTOCOL_VERSION})")
+            if op in ("subscribe", "resume"):
+                info = self.proxy.attach(
+                    msg.get("group"), flags=msg.get("flags"),
+                    mode=msg.get("mode", "persistent"),
+                    types=msg.get("types"), name=msg.get("name"),
+                    resume=True if op == "resume" else msg.get("resume"))
+                session.setdefault("cids", set()).add(info["cid"])
+                return {"v": PROTOCOL_VERSION, **info}
+            if op == "register":      # legacy readers; same flag default
                 cid = self.proxy.subscribe(msg.get("group"),
-                                           msg.get("flags", 0xFFFF),
+                                           msg.get("flags"),
                                            msg.get("mode", "persistent"))
-                session["cid"] = cid
+                session.setdefault("cids", set()).add(cid)
                 return {"cid": cid}
             if op == "fetch":
                 # whole batches on the wire: one (producer, frame) pair
@@ -45,26 +76,33 @@ class LcapService:
                                                    msg.get("max", 256))
                 return {"batches": [(pid, batch.to_wire())
                                     for pid, batch in batches]}
+            if op == "commit":
+                self.proxy.commit(msg["cid"], msg["acks"])
+                return {"ok": True}
             if op == "ack":
                 self.proxy.ack(msg["cid"], msg["pid"], msg["index"])
                 return {"ok": True}
             if op == "ack_batch":
                 self.proxy.ack_batch(msg["cid"], msg["pid"], msg["indices"])
                 return {"ok": True}
+            if op == "detach":
+                session.get("cids", set()).discard(msg["cid"])
+                self.proxy.disconnect(msg["cid"])
+                return {"ok": True}
             if op == "close":
-                session.pop("cid", None)
+                session.get("cids", set()).discard(msg["cid"])
                 self.proxy.unsubscribe(msg["cid"])
                 return {"ok": True}
             if op == "stats":
                 return {"stats": dict(self.proxy.stats)}
-            return {"err": f"unknown op {op!r}"}
+            raise SessionError(f"unknown op {op!r}")
         except Exception as exc:  # noqa: BLE001 — reported to the peer
-            return {"err": f"{type(exc).__name__}: {exc}"}
+            return {"err": f"{type(exc).__name__}: {exc}",
+                    "err_type": type(exc).__name__}
 
     def _disconnected(self, session: Dict) -> None:
-        cid = session.get("cid")
-        if cid:
-            self.proxy.unsubscribe(cid, failed=True)
+        for cid in session.get("cids", ()):  # durable -> park, else fail
+            self.proxy.disconnect(cid)
 
     # -------------------------------------------------------------- poller
     def _poll_loop(self) -> None:

@@ -1,0 +1,397 @@
+"""Unified changelog client API: Subscription / Session / Stream.
+
+One consumer-facing surface over both bindings (in-process proxy and
+TCP), replacing the ``LocalReader``/``RemoteReader`` split:
+
+- a ``Subscription`` declares *what* to consume: group, optional durable
+  consumer name, delivery mode, §IV-A field projection (``flags``) and
+  an op-type mask (``types``).  Both filters are pushed down to
+  ``LcapProxy._dispatch`` — filtered records are never copied into the
+  consumer's outbox, extending the paper's "remote remap" idea from
+  fields to whole records;
+- a ``Session`` is a connection: ``connect(proxy_or_address)`` returns
+  one object with one implementation, backed by either the in-process
+  proxy or the wire protocol (``subscribe``/``resume``/``commit``
+  verbs, versioned messages);
+- a ``Stream`` is a live subscription: iterate it for ``(producer,
+  RecordBatch)`` pairs with per-producer cursor tracking and automatic
+  batched acknowledgement (commit-on-iterate), or drive ``fetch()`` /
+  ``commit()`` explicitly.
+
+Durable consumers (``name=``) survive disconnects: the proxy parks
+their unacked records and ack watermark under ``(group, name)``, and
+``session.resume(group, name)`` (or a plain ``subscribe`` under the
+same name) picks up exactly at the cursor — the stream's
+``resume_token`` reports the per-producer watermark that was restored.
+
+    session = lcap.connect(service.address)      # or connect(proxy)
+    stream = session.subscribe(
+        "ckpt", name="committer-0", types={R.CL_CKPT_WRITE})
+    for pid, batch in stream:                    # auto-commits batches
+        handle(pid, batch)
+
+Failures surface as typed exceptions (``UnknownConsumerError``,
+``SubscriptionError``) on both bindings, never as error strings.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Deque, Dict, Iterator, List, Optional, Tuple, Union
+
+from . import records as R
+from .errors import (SessionError, SubscriptionError,  # noqa: F401 (re-export)
+                     UnknownConsumerError, raise_reply_error)
+from .proxy import EPHEMERAL, PERSISTENT, LcapProxy
+from .transport import PROTOCOL_VERSION, RpcClient
+
+Address = Union[str, Tuple[str, int]]
+
+
+@dataclass(frozen=True)
+class Subscription:
+    """Declarative consumer spec.
+
+    group        consumer group (required for persistent mode)
+    name         durable identity within the group; survives disconnects
+    mode         PERSISTENT (default) or EPHEMERAL (§IV-B radio semantics)
+    flags        CLF_* field projection; None = everything supported
+    types        CL_* op-type mask; None = every operation
+    auto_commit  iterate-commits-previous-batch (True) vs explicit commit()
+    max_records  fetch granularity (records per fetch round)
+    """
+
+    group: Optional[str] = None
+    name: Optional[str] = None
+    mode: str = PERSISTENT
+    flags: Optional[int] = None
+    types: Optional[frozenset] = None
+    auto_commit: bool = True
+    max_records: int = 1024
+
+    def __post_init__(self):
+        if self.types is not None and not isinstance(self.types, frozenset):
+            object.__setattr__(self, "types", frozenset(self.types))
+        if self.mode == PERSISTENT and not self.group:
+            raise SubscriptionError("persistent subscriptions need a group")
+        if self.mode == EPHEMERAL and self.name:
+            raise SubscriptionError("ephemeral subscriptions cannot be "
+                                    "durable")
+
+
+# ---------------------------------------------------------------------------
+# One Session implementation, two backends.  A backend speaks attach /
+# fetch / commit / unsubscribe / disconnect — the in-process one calls
+# the proxy directly, the wire one frames the same verbs over TCP.
+# ---------------------------------------------------------------------------
+class _LocalBackend:
+    def __init__(self, proxy: LcapProxy):
+        self.proxy = proxy
+
+    def attach(self, spec: Subscription,
+               resume: Optional[bool] = None) -> Dict:
+        return self.proxy.attach(spec.group, flags=spec.flags,
+                                 mode=spec.mode, types=spec.types,
+                                 name=spec.name, resume=resume)
+
+    def fetch(self, cid: str, max_records: int,
+              ) -> List[Tuple[str, R.RecordBatch]]:
+        return self.proxy.fetch_batches(cid, max_records)
+
+    def commit(self, cid: str, acks: Dict[str, List[int]]) -> None:
+        self.proxy.commit(cid, acks)
+
+    def unsubscribe(self, cid: str) -> None:
+        self.proxy.unsubscribe(cid)
+
+    def disconnect(self, cid: str) -> None:
+        self.proxy.disconnect(cid)
+
+    crash = disconnect          # an in-process "connection" just vanishes
+
+    def stats(self) -> Dict:
+        return dict(self.proxy.stats)
+
+    def close(self) -> None:
+        pass
+
+
+class _WireBackend:
+    def __init__(self, address: Tuple[str, int]):
+        self.rpc = RpcClient(address)
+
+    def _call(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        msg.setdefault("v", PROTOCOL_VERSION)
+        reply = self.rpc.call(msg)
+        raise_reply_error(reply)
+        return reply
+
+    def attach(self, spec: Subscription,
+               resume: Optional[bool] = None) -> Dict:
+        reply = self._call({
+            "op": "resume" if resume else "subscribe",
+            "group": spec.group, "name": spec.name, "mode": spec.mode,
+            "flags": spec.flags, "resume": resume,
+            "types": sorted(spec.types) if spec.types is not None else None,
+        })
+        return {"cid": reply["cid"], "resumed": reply.get("resumed", False),
+                "flags": reply.get("flags"),
+                "token": reply.get("token") or {}}
+
+    def fetch(self, cid: str, max_records: int,
+              ) -> List[Tuple[str, R.RecordBatch]]:
+        reply = self._call({"op": "fetch", "cid": cid, "max": max_records})
+        return [(pid, R.RecordBatch.from_wire(blob))
+                for pid, blob in reply["batches"]]
+
+    def commit(self, cid: str, acks: Dict[str, List[int]]) -> None:
+        self._call({"op": "commit", "cid": cid,
+                    "acks": {pid: list(ix) for pid, ix in acks.items()}})
+
+    def unsubscribe(self, cid: str) -> None:
+        self._call({"op": "close", "cid": cid})
+
+    def disconnect(self, cid: str) -> None:
+        self._call({"op": "detach", "cid": cid})
+
+    def crash(self, cid: str) -> None:
+        # simulate a crash: drop the socket without deregistering; the
+        # service's disconnect hook parks (durable) or fails (anonymous)
+        self.rpc.close()
+
+    def stats(self) -> Dict:
+        return self._call({"op": "stats"})["stats"]
+
+    def close(self) -> None:
+        self.rpc.close()
+
+
+class Stream:
+    """A live subscription: an iterator of ``(producer, RecordBatch)``
+    pairs with cursor tracking and batched acknowledgement.
+
+    Iterating auto-commits: each time the stream needs a new fetch
+    round, every batch yielded so far is acknowledged in one ``commit``
+    call (disable with ``auto_commit=False`` and call ``commit()``
+    yourself — at-least-once either way).  Iteration stops when the
+    proxy has nothing queued; poll again (or iterate again) later.
+    """
+
+    def __init__(self, session: "Session", spec: Subscription, info: Dict):
+        self.session = session
+        self.spec = spec
+        self.cid: str = info["cid"]
+        self.resumed: bool = info["resumed"]
+        #: producer -> highest acked index (the durable cursor restored
+        #: on resume, advanced by every commit)
+        self.resume_token: Dict[str, int] = dict(info["token"])
+        #: producer -> highest index delivered to the application
+        self.cursors: Dict[str, int] = {}
+        self._uncommitted: Dict[str, List[int]] = {}
+        self._queue: Deque[Tuple[str, R.RecordBatch]] = deque()
+        # the proxy reports the *effective* projection (a resumed
+        # consumer may have inherited a narrower parked mask); the
+        # local remap must match it, not the spec's default
+        flags = info.get("flags")
+        self._flags = R.normalize_flags(spec.flags if flags is None
+                                        else flags)
+        self._closed = False
+
+    # -- delivery ------------------------------------------------------------
+    def _remap(self, batch: R.RecordBatch) -> R.RecordBatch:
+        # local remap: zero-fill requested-but-absent fields (§IV-A)
+        return batch.remap(self._flags)
+
+    def _note(self, pid: str, batch: R.RecordBatch) -> None:
+        indices = batch.indices()
+        if indices:
+            # max, not last: a proxy module may reorder within a batch
+            self.cursors[pid] = max(self.cursors.get(pid, 0), max(indices))
+            if self.spec.mode != EPHEMERAL:
+                self._uncommitted.setdefault(pid, []).extend(indices)
+
+    def fetch(self, max_records: Optional[int] = None,
+              ) -> List[Tuple[str, R.RecordBatch]]:
+        """Explicitly drain up to ``max_records`` queued records; every
+        returned batch becomes commit-pending.  Locally requeued batches
+        (see ``requeue``) are returned first."""
+        cap = max_records or self.spec.max_records
+        out, taken = [], 0
+        while self._queue and taken < cap:
+            pid, batch = self._queue.popleft()
+            self._note(pid, batch)
+            out.append((pid, batch))
+            taken += len(batch)
+        if taken < cap:
+            for pid, batch in self.session._backend.fetch(self.cid,
+                                                          cap - taken):
+                batch = self._remap(batch)
+                self._note(pid, batch)
+                out.append((pid, batch))
+        return out
+
+    def __iter__(self) -> Iterator[Tuple[str, R.RecordBatch]]:
+        return self
+
+    def __next__(self) -> Tuple[str, R.RecordBatch]:
+        if not self._queue:
+            if self.spec.auto_commit:
+                self.commit()
+            for pid, batch in self.session._backend.fetch(
+                    self.cid, self.spec.max_records):
+                self._queue.append((pid, self._remap(batch)))
+            if not self._queue:
+                raise StopIteration
+        pid, batch = self._queue.popleft()
+        self._note(pid, batch)
+        return pid, batch
+
+    def records(self) -> Iterator[Tuple[str, R.ChangelogRecord]]:
+        """Record-level convenience over the batch iterator."""
+        for pid, batch in self:
+            for i in range(len(batch)):
+                yield pid, batch.record(i)
+
+    # -- acknowledgement -----------------------------------------------------
+    @property
+    def pending_commit(self) -> int:
+        return sum(len(v) for v in self._uncommitted.values())
+
+    def requeue(self, pairs: List[Tuple[str, R.RecordBatch]]) -> None:
+        """Return delivered-but-unprocessed batches to the stream (a
+        handler failed): they are withdrawn from the commit-pending set
+        and handed out again at the front of the next fetch/iteration
+        round, so a retrying consumer reprocesses them instead of
+        wedging them in flight or acknowledging them unhandled."""
+        for pid, batch in reversed(pairs):
+            drop = set(batch.indices())
+            left = [i for i in self._uncommitted.get(pid, ())
+                    if i not in drop]
+            if left:
+                self._uncommitted[pid] = left
+            else:
+                self._uncommitted.pop(pid, None)
+            self._queue.appendleft((pid, batch))
+
+    def commit(self) -> int:
+        """Acknowledge every delivered-but-uncommitted record in one
+        call; returns how many were acknowledged.  A failed commit
+        keeps the records commit-pending, so a later retry still
+        acknowledges them (at-least-once)."""
+        if not self._uncommitted:
+            return 0
+        acks, self._uncommitted = self._uncommitted, {}
+        try:
+            self.session._backend.commit(self.cid, acks)
+        except Exception:
+            for pid, indices in acks.items():
+                self._uncommitted.setdefault(pid, [])[:0] = indices
+            raise
+        for pid, indices in acks.items():
+            self.resume_token[pid] = max(self.resume_token.get(pid, 0),
+                                         max(indices))
+        return sum(len(v) for v in acks.values())
+
+    # -- lifecycle -----------------------------------------------------------
+    def detach(self) -> None:
+        """Let go of the connection but keep the durable identity: a
+        later ``resume`` under the same (group, name) continues at the
+        cursor.  For anonymous consumers this is a failure (backlog
+        redelivered)."""
+        if not self._closed:
+            self._closed = True
+            self.session._backend.disconnect(self.cid)
+            self.session._forget(self)
+
+    def close(self, failed: bool = False) -> None:
+        """Deregister.  ``failed=True`` simulates a crash instead; on
+        the wire binding that drops the Session's socket — taking every
+        sibling stream of the same Session down with it, exactly like a
+        real process death (use one Session per consumer when streams
+        must fail independently)."""
+        if self._closed:
+            return
+        self._closed = True
+        if failed:
+            self.session._backend.crash(self.cid)
+        else:
+            self.session._backend.unsubscribe(self.cid)
+        self.session._forget(self)
+
+
+class Session:
+    """A connection to one changelog proxy, local or remote.  Make one
+    with ``connect``; open any number of subscriptions on it."""
+
+    def __init__(self, backend):
+        self._backend = backend
+        self._streams: List[Stream] = []
+
+    def subscribe(self, subscription: Union[Subscription, str, None] = None,
+                  *, resume: Optional[bool] = None, **spec_kwargs) -> Stream:
+        """Open a subscription.  Accepts a ``Subscription`` or builds one
+        from kwargs (a plain string is shorthand for the group name).
+        A durable name with parked state resumes transparently;
+        ``resume=False`` refuses parked state instead (fresh identity or
+        error), ``resume=True`` demands it (same as ``resume()``)."""
+        if isinstance(subscription, Subscription):
+            if spec_kwargs:
+                raise SubscriptionError("pass either a Subscription or "
+                                        "spec kwargs, not both")
+            spec = subscription
+        else:
+            spec = Subscription(group=subscription, **spec_kwargs)
+        return self._open(spec, resume=resume)
+
+    def resume(self, group: str, name: str, **spec_kwargs) -> Stream:
+        """Re-attach a durable consumer at its acknowledged cursor.
+        Raises ``UnknownConsumerError`` when no parked state exists
+        (never attached, expired, or already resumed)."""
+        spec = Subscription(group=group, name=name, **spec_kwargs)
+        return self._open(spec, resume=True)
+
+    def _open(self, spec: Subscription, resume: Optional[bool]) -> Stream:
+        info = self._backend.attach(spec, resume=resume)
+        stream = Stream(self, spec, info)
+        self._streams.append(stream)
+        return stream
+
+    def _forget(self, stream: Stream) -> None:
+        if stream in self._streams:
+            self._streams.remove(stream)
+
+    def stats(self) -> Dict:
+        return self._backend.stats()
+
+    def close(self) -> None:
+        try:
+            for stream in list(self._streams):
+                try:
+                    stream.close()
+                except OSError:
+                    pass    # connection already gone; nothing to undo
+        finally:
+            self._backend.close()
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def connect(target: Union[LcapProxy, "LcapService", Address]) -> Session:
+    """Open a ``Session`` against an in-process ``LcapProxy``, a running
+    ``LcapService`` (its address is used), a ``(host, port)`` tuple, or
+    a ``"host:port"`` string — one client API over both bindings.
+    Close the session (or use it as a context manager) to release the
+    wire binding's connection; closing individual streams only
+    deregisters the consumers."""
+    if isinstance(target, LcapProxy):
+        return Session(_LocalBackend(target))
+    address = getattr(target, "address", target)   # LcapService duck-type
+    if isinstance(address, str):
+        host, _, port = address.rpartition(":")
+        address = (host, int(port))
+    return Session(_WireBackend(tuple(address)))

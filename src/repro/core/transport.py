@@ -19,6 +19,10 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import msgpack
 
+#: wire protocol generation, stamped as "v" on every client message and
+#: checked by the server — one definition for both halves
+PROTOCOL_VERSION = 1
+
 _LEN = struct.Struct("<I")
 
 

@@ -4,8 +4,12 @@ Instead of a POSIX-style scan to populate a fresh policy/metrics
 database, synthesize "a special changelog stream, filled with entries
 from the MDT object index, and consumed by instances of the policy
 engine".  Here the object index is the framework's checkpoint/object
-manifest; the synthetic stream is consumed by load-balanced MetricsDB
-instances exactly like live records — no separate scan path.
+manifest; the synthetic stream is consumed through ordinary Session
+subscriptions by load-balanced MetricsDB instances exactly like live
+records — no separate scan path:
+
+    proxy = LcapProxy({"index0": synthesize_index_stream(index)})
+    workers = [MetricsDB(proxy, db_path) for _ in range(4)]
 """
 
 from __future__ import annotations

@@ -1,19 +1,27 @@
-"""LCAP consumer groups used by the framework.
+"""LCAP consumer groups used by the framework, on the Session API.
+
+Every worker subscribes declaratively (``session.subscribe``) and names
+the op types it consumes, so the proxy's server-side pushdown never
+copies irrelevant records into its outbox:
 
 - ``MetricsDB`` — the Robinhood analogue: N load-balanced instances of
   one group replicate the record stream into one shared SQLite database
   (paper §III: "multiple instances of robinhood operating on a shared
-  database").
-- ``CheckpointCommitter`` — consumes CKPT_WRITE records; once every
-  shard of a step has been seen (across all producers), publishes the
-  checkpoint-commit manifest.  Runs as a load-balanced group; members
-  coordinate through the shared manifest store.
-- ``StragglerDetector`` — consumes HEARTBEAT records; EWMA per host +
-  z-score against the fleet median flags stragglers.
-- ``ElasticController`` — consumes ELASTIC_JOIN/LEAVE; recomputes the
-  device plan for the next restart window.
+  database").  Subscribes to everything (it is the audit log).
+- ``CheckpointCommitter`` — CKPT_WRITE only; once every shard of a step
+  has been seen (across all producers), publishes the checkpoint-commit
+  manifest.  Runs as a load-balanced group; members coordinate through
+  the shared manifest store.
+- ``StragglerDetector`` — HEARTBEAT + STEP_COMMIT; EWMA per host
+  against the fleet median flags stragglers.
+- ``ElasticController`` — ELASTIC_JOIN/LEAVE; recomputes the device
+  plan for the next restart window.
 - ``CacheInvalidator`` — the Ganesha analogue (§IV-C-1): ephemeral
   consumer of EVICT records that invalidates a local cache.
+
+Workers may pass ``name=`` to become durable consumers: a crashed
+worker that reconnects under the same name resumes at its acknowledged
+cursor instead of triggering a group-wide redelivery storm.
 """
 
 from __future__ import annotations
@@ -23,26 +31,40 @@ import math
 import os
 import sqlite3
 import threading
-from collections import defaultdict
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 from ..core import records as R
-from ..core.reader import LocalReader
+from ..core.session import Subscription, connect
 
 
 class _GroupWorker:
-    """Base: pull record batches from a LocalReader, process, ack the
-    whole batch at once (acks "may be delayed and batched", paper §II)."""
+    """Base: subscribe a Stream, process batches, commit after each poll
+    round (acks "may be delayed and batched", paper §II)."""
 
-    def __init__(self, proxy, group: str, flags: int = R.CLF_SUPPORTED):
-        self.reader = LocalReader(proxy, group, flags=flags)
+    def __init__(self, proxy, group: str, flags: Optional[int] = None,
+                 types: Optional[Iterable[int]] = None,
+                 name: Optional[str] = None, mode: str = "persistent"):
+        self.session = connect(proxy)
+        self.stream = self.session.subscribe(Subscription(
+            group=None if mode == "ephemeral" else group, mode=mode,
+            flags=flags, types=types, name=name, auto_commit=False))
 
     def poll(self, max_records: int = 256) -> int:
         n = 0
-        for pid, batch in self.reader.fetch_batches(max_records):
-            self.handle_batch(pid, batch)
-            self.reader.ack_batch(pid, batch.indices())
-            n += len(batch)
+        batches = self.stream.fetch(max_records)
+        done = 0
+        try:
+            for pid, batch in batches:
+                self.handle_batch(pid, batch)
+                done += 1
+                n += len(batch)
+        except Exception:
+            # a failed handler must not let a later commit() ack the
+            # unprocessed records: requeue them so the next poll
+            # retries exactly where this one failed
+            self.stream.requeue(batches[done:])
+            raise
+        self.stream.commit()
         return n
 
     def handle_batch(self, pid: str, batch: R.RecordBatch) -> None:
@@ -55,8 +77,9 @@ class _GroupWorker:
     def handle(self, pid: str, rec: R.ChangelogRecord) -> None:
         raise NotImplementedError
 
-    def close(self) -> None:
-        self.reader.close()
+    def close(self, failed: bool = False) -> None:
+        self.stream.close(failed=failed)
+        self.session.close()
 
 
 class MetricsDB(_GroupWorker):
@@ -71,8 +94,9 @@ class MetricsDB(_GroupWorker):
     );
     """
 
-    def __init__(self, proxy, db_path: str, group: str = "metrics"):
-        super().__init__(proxy, group)
+    def __init__(self, proxy, db_path: str, group: str = "metrics",
+                 name: Optional[str] = None):
+        super().__init__(proxy, group, name=name)
         self.db_path = db_path
         self.conn = sqlite3.connect(db_path, timeout=30.0,
                                     check_same_thread=False)
@@ -116,8 +140,9 @@ class CheckpointCommitter(_GroupWorker):
     present.  The shared manifest dir is the coordination point, so the
     group can be load-balanced (any member may complete a step)."""
 
-    def __init__(self, proxy, manifest_dir: str, group: str = "ckpt"):
-        super().__init__(proxy, group)
+    def __init__(self, proxy, manifest_dir: str, group: str = "ckpt",
+                 name: Optional[str] = None):
+        super().__init__(proxy, group, types={R.CL_CKPT_WRITE}, name=name)
         self.dir = manifest_dir
         os.makedirs(manifest_dir, exist_ok=True)
         self._lock = threading.Lock()
@@ -168,8 +193,9 @@ class StragglerDetector(_GroupWorker):
     ``threshold`` x the fleet median is flagged."""
 
     def __init__(self, proxy, group: str = "health", alpha: float = 0.3,
-                 threshold: float = 1.5):
-        super().__init__(proxy, group)
+                 threshold: float = 1.5, name: Optional[str] = None):
+        super().__init__(proxy, group,
+                         types={R.CL_HEARTBEAT, R.CL_STEP_COMMIT}, name=name)
         self.alpha = alpha
         self.threshold = threshold
         self.ewma: Dict[int, float] = {}
@@ -179,8 +205,13 @@ class StragglerDetector(_GroupWorker):
         if rec.type not in (R.CL_HEARTBEAT, R.CL_STEP_COMMIT):
             return
         host = rec.tfid.oid
-        dt = (rec.metrics or (0.0,))[-2] if rec.type == R.CL_STEP_COMMIT \
-            else (rec.metrics or (0.0,))[0]
+        m = rec.metrics or ()
+        if rec.type == R.CL_STEP_COMMIT:
+            # step_commit metrics are (loss, step_time_s, tokens); be
+            # robust to truncated records instead of crashing the poll
+            dt = m[-2] if len(m) >= 2 else (m[0] if m else 0.0)
+        else:
+            dt = m[0] if m else 0.0
         prev = self.ewma.get(host)
         self.ewma[host] = dt if prev is None else \
             self.alpha * dt + (1 - self.alpha) * prev
@@ -202,8 +233,10 @@ class ElasticController(_GroupWorker):
     proposes the largest usable mesh for the next restart window."""
 
     def __init__(self, proxy, group: str = "elastic",
-                 chips_per_host: int = 4):
-        super().__init__(proxy, group)
+                 chips_per_host: int = 4, name: Optional[str] = None):
+        super().__init__(proxy, group,
+                         types={R.CL_ELASTIC_JOIN, R.CL_ELASTIC_LEAVE},
+                         name=name)
         self.chips_per_host = chips_per_host
         self.members: Set[int] = set()
         self.generation = 0
@@ -233,14 +266,14 @@ class CacheInvalidator(_GroupWorker):
 
     def __init__(self, proxy, cache: Dict[Tuple[int, int], object],
                  mode: str = "ephemeral"):
-        self.reader = LocalReader(proxy, None if mode == "ephemeral" else "evict",
-                                  flags=R.CLF_SUPPORTED, mode=mode)
+        # pushdown: only EVICT records ever reach this consumer's outbox
+        super().__init__(proxy, "evict", types={R.CL_EVICT}, mode=mode)
         self.cache = cache
         self.invalidated = 0
 
     def poll(self, max_records: int = 256) -> int:
         n = 0
-        for pid, batch in self.reader.fetch_batches(max_records):
+        for pid, batch in self.stream.fetch(max_records):
             for i in range(len(batch)):
                 # type + tfid straight from the packed header — an
                 # invalidator never needs the record body
@@ -248,10 +281,6 @@ class CacheInvalidator(_GroupWorker):
                     _, oid, ver = batch.packed_tfid(i)
                     if self.cache.pop((oid, ver), None) is not None:
                         self.invalidated += 1
-            if self.reader.mode == "persistent":
-                self.reader.ack_batch(pid, batch.indices())
             n += len(batch)
+        self.stream.commit()               # no-op for the ephemeral mode
         return n
-
-    def close(self) -> None:
-        self.reader.close()

@@ -1,0 +1,546 @@
+"""Unified Session/Subscription/Stream API: one implementation over
+both bindings, server-side op-type + flag pushdown, durable consumers
+with exact-cursor resume, typed errors."""
+
+import time
+
+import pytest
+
+from repro.core import records as R
+from repro.core.errors import (SessionError, SubscriptionError,
+                               UnknownConsumerError)
+from repro.core.llog import Llog
+from repro.core.proxy import LcapProxy
+from repro.core.server import LcapService
+from repro.core.session import Subscription, connect
+
+
+def rec(t=R.CL_CREATE, oid=1, name=b"f", **kw):
+    return R.ChangelogRecord(type=t, tfid=R.Fid(1, oid, 0),
+                             pfid=R.Fid(1, 0, 0), name=name,
+                             jobid=b"job", **kw)
+
+
+def mk_proxy(n_producers=1, **kw):
+    logs = {f"mdt{i}": Llog(f"mdt{i}") for i in range(n_producers)}
+    return LcapProxy(logs, **kw), logs
+
+
+def feed_types(logs, n_each, types):
+    """Round-robin over ``types`` so each appears n_each/len(types) times."""
+    for log in logs.values():
+        for i in range(n_each):
+            log.log(rec(t=types[i % len(types)], oid=i))
+
+
+def drain_all(stream, max_records=4096):
+    got = []
+    for pid, batch in stream:
+        got.extend((pid, batch.packed_index(i)) for i in range(len(batch)))
+        assert len(got) <= max_records
+    return got
+
+
+@pytest.fixture()
+def service():
+    proxy, logs = mk_proxy(2)
+    svc = LcapService(proxy, poll_interval=0.001).start()
+    yield svc, proxy, logs
+    svc.stop()
+
+
+def wait_for(cond, timeout=5.0):
+    deadline = time.time() + timeout
+    while not cond() and time.time() < deadline:
+        time.sleep(0.002)
+    assert cond()
+
+
+# ---------------------------------------------------------------- bindings
+def test_one_api_both_bindings(service):
+    """connect() serves the in-process proxy and the wire through the
+    same Session implementation."""
+    svc, proxy, logs = service
+    local = connect(proxy).subscribe("g-local")
+    remote = connect(svc.address).subscribe("g-remote")
+    feed_types(logs, 5, [R.CL_CREATE])
+    got_local, got_remote = [], []
+    wait_for(lambda: (got_local.extend(drain_all(local)),
+                      got_remote.extend(drain_all(remote)),
+                      len(got_local) == 10 and len(got_remote) == 10)[-1])
+    assert remote.cursors["mdt0"] == 5 and remote.cursors["mdt1"] == 5
+    local.commit()
+    remote.commit()
+    proxy.flush_upstream()
+    wait_for(lambda: all(log.first_index == 6 for log in logs.values()))
+
+
+def test_connect_accepts_service_and_host_string(service):
+    svc, proxy, logs = service
+    host, port = svc.address
+    for target in (svc, f"{host}:{port}"):
+        stream = connect(target).subscribe("g")
+        stream.close()
+
+
+# ---------------------------------------------------------------- pushdown
+def test_op_type_pushdown_copies_one_in_n():
+    """A subscription filtering to 1 of N op types makes the proxy copy
+    ~1/N of the records into that consumer's outbox; the rest are acked
+    in place (never materialized into any outbox)."""
+    proxy, logs = mk_proxy(1)
+    types = [R.CL_CREATE, R.CL_UNLINK, R.CL_MKDIR, R.CL_SETATTR]
+    stream = connect(proxy).subscribe("g", types={R.CL_SETATTR})
+    feed_types(logs, 100, types)
+    proxy.pump()
+    assert proxy.stats["ingested"] == 100
+    assert proxy.stats["dispatched"] == 25          # 1 of 4 op types
+    assert proxy.stats["filtered_out"] == 75
+    assert proxy.consumers[stream.cid].delivered == 25
+    got = drain_all(stream)
+    assert len(got) == 25
+    stream.commit()
+    proxy.flush_upstream()
+    # filtered records never block the collective ack/trim
+    assert logs["mdt0"].first_index == 101
+
+
+def test_pushdown_filters_within_group_members():
+    """Members of one group with different masks: each record goes to a
+    member that asked for its type."""
+    proxy, logs = mk_proxy(1)
+    session = connect(proxy)
+    creat = session.subscribe("g", types={R.CL_CREATE})
+    other = session.subscribe("g")                  # takes everything
+    feed_types(logs, 40, [R.CL_CREATE, R.CL_UNLINK])
+    proxy.pump()
+    got_creat = drain_all(creat)
+    got_other = drain_all(other)
+    assert len(got_creat) + len(got_other) == 40
+    # feed alternates CREATE/UNLINK, so CREATEs hold the odd indices —
+    # the filtered member must never have received an even (UNLINK) one
+    assert all(i % 2 == 1 for _, i in got_creat)
+    # every UNLINK had to land on the unfiltered member
+    assert len(got_other) >= 20
+
+
+def test_ephemeral_pushdown():
+    proxy, logs = mk_proxy(1)
+    anchor = connect(proxy).subscribe("g")
+    eph = connect(proxy).subscribe(mode="ephemeral",
+                                   types={R.CL_UNLINK})
+    feed_types(logs, 10, [R.CL_CREATE, R.CL_UNLINK])
+    proxy.pump()
+    got = drain_all(eph)
+    assert len(got) == 5
+    drain_all(anchor)
+
+
+def test_flag_projection_via_session():
+    """§IV-A field projection still rides the same subscription."""
+    proxy, logs = mk_proxy(1)
+    narrow = connect(proxy).subscribe("old", flags=0)
+    wide = connect(proxy).subscribe("new")
+    logs["mdt0"].log(rec(metrics=(3.5,)))
+    proxy.pump()
+    ((_, b_old),) = narrow.fetch()
+    ((_, b_new),) = wide.fetch()
+    assert b_old.record(0).jobid is None and b_old.record(0).metrics is None
+    assert b_new.record(0).jobid == b"job" and b_new.record(0).metrics == (3.5,)
+
+
+# ------------------------------------------------------------- auto-commit
+def test_iterate_auto_commits():
+    proxy, logs = mk_proxy(1)
+    stream = connect(proxy).subscribe("g")
+    feed_types(logs, 20, [R.CL_CREATE])
+    proxy.pump()
+    assert len(drain_all(stream)) == 20
+    # the terminal fetch round committed every yielded batch
+    assert stream.pending_commit == 0
+    proxy.flush_upstream()
+    assert logs["mdt0"].first_index == 21
+    assert stream.resume_token == {"mdt0": 20}
+
+
+def test_explicit_commit_mode():
+    proxy, logs = mk_proxy(1)
+    stream = connect(proxy).subscribe("g", auto_commit=False)
+    feed_types(logs, 10, [R.CL_CREATE])
+    proxy.pump()
+    assert len(drain_all(stream)) == 10
+    assert stream.pending_commit == 10
+    proxy.flush_upstream()
+    assert logs["mdt0"].first_index == 1            # nothing acked yet
+    assert stream.commit() == 10
+    proxy.flush_upstream()
+    assert logs["mdt0"].first_index == 11
+
+
+# ------------------------------------------------- durable consumer failure
+def test_durable_crash_then_resume_exact_cursor():
+    """(b) of the failure-semantics contract: a durable consumer that
+    reconnects under the same name resumes at its ack cursor — its own
+    unacked records are replayed to it alone, with no redelivery storm
+    into the surviving members."""
+    proxy, logs = mk_proxy(1)
+    survivor = connect(proxy).subscribe("g")
+    worker = connect(proxy).subscribe("g", name="w0")
+    feed_types(logs, 40, [R.CL_CREATE])
+    proxy.pump()
+    first = worker.fetch(4)
+    worker.commit()
+    acked = [i for _, b in first for i in b.indices()]
+    unacked = [i for _, b in worker.fetch(100) for i in b.indices()]
+    survivor_before = proxy.consumers[survivor.cid].delivered
+    worker.close(failed=True)                       # crash mid-flight
+    proxy.pump()
+    assert proxy.stats["parked"] == 1
+    assert proxy.stats["redelivered"] == 0          # no storm
+    assert proxy.consumers[survivor.cid].delivered == survivor_before
+
+    resumed = connect(proxy).resume("g", "w0")
+    assert resumed.resumed
+    assert resumed.resume_token == {"mdt0": max(acked)}
+    replay = [i for _, b in resumed.fetch(100) for i in b.indices()]
+    assert replay == unacked                        # exact cursor resume
+    assert proxy.stats["redelivered"] == 0
+    resumed.commit()
+    survivor_got = drain_all(survivor)
+    survivor.commit()
+    proxy.flush_upstream()
+    assert len(replay) + len(acked) + len(survivor_got) == 40
+    assert logs["mdt0"].first_index == 41           # fully trimmed
+
+
+def test_durable_expiry_redelivers_to_survivors():
+    """(a) of the failure-semantics contract: when the durable consumer
+    does NOT come back, its backlog goes to the surviving members once
+    the park window lapses (at-least-once)."""
+    proxy, logs = mk_proxy(1, resume_ttl=0.0)
+    survivor = connect(proxy).subscribe("g")
+    worker = connect(proxy).subscribe("g", name="w0")
+    feed_types(logs, 30, [R.CL_CREATE])
+    proxy.pump()
+    lost = [i for _, b in worker.fetch(100) for i in b.indices()]
+    assert lost
+    worker.close(failed=True)
+    proxy.pump()                                    # ttl=0: expires now
+    assert proxy.stats["parks_expired"] == 1
+    assert proxy.stats["redelivered"] == len(lost)
+    seen = {i for _, i in drain_all(survivor)}
+    survivor.commit()
+    proxy.flush_upstream()
+    assert seen == set(range(1, 31))                # nothing lost
+    assert logs["mdt0"].first_index == 31
+
+
+def test_durable_forget_redelivers_immediately():
+    proxy, logs = mk_proxy(1)
+    survivor = connect(proxy).subscribe("g")
+    worker = connect(proxy).subscribe("g", name="w0")
+    feed_types(logs, 10, [R.CL_CREATE])
+    proxy.pump()
+    worker.fetch(100)
+    worker.close(failed=True)
+    proxy.forget("g", "w0")
+    assert {i for _, i in drain_all(survivor)} == set(range(1, 11))
+    with pytest.raises(UnknownConsumerError):
+        proxy.forget("g", "w0")
+
+
+def test_resume_inherits_parked_subscription_spec():
+    """A bare resume(group, name) keeps the filters the consumer
+    declared when it first subscribed — flags and op-type mask both."""
+    proxy, logs = mk_proxy(1)
+    worker = connect(proxy).subscribe("g", name="w0", flags=R.CLF_JOBID,
+                                      types={R.CL_SETATTR})
+    worker.close(failed=True)
+    resumed = connect(proxy).resume("g", "w0")
+    cons = proxy.consumers[resumed.cid]
+    assert cons.flags == R.CLF_JOBID
+    assert cons.types == frozenset({R.CL_SETATTR})
+    # ...and explicit overrides win
+    resumed.close(failed=True)
+    widened = connect(proxy).resume("g", "w0", types={R.CL_SETATTR,
+                                                      R.CL_CREATE})
+    assert proxy.consumers[widened.cid].types == \
+        frozenset({R.CL_SETATTR, R.CL_CREATE})
+    assert proxy.consumers[widened.cid].flags == R.CLF_JOBID
+
+
+def test_resume_with_narrowed_types_routes_excluded_backlog():
+    """Explicitly narrowing the op-type mask on resume filters the
+    replayed backlog too: excluded records go back through group
+    dispatch (another member, or acked in place) — never to the
+    narrowed consumer."""
+    proxy, logs = mk_proxy(1)
+    worker = connect(proxy).subscribe("g", name="w0")   # all types
+    feed_types(logs, 10, [R.CL_CREATE, R.CL_SETATTR])
+    proxy.pump()
+    worker.fetch(100)                                   # all 10 in flight
+    worker.close(failed=True)
+    resumed = connect(proxy).resume("g", "w0", types={R.CL_SETATTR})
+    replay = [i for _, b in resumed.fetch(100) for i in b.indices()]
+    assert replay == [2, 4, 6, 8, 10]                   # SETATTRs only
+    resumed.commit()
+    proxy.flush_upstream()
+    # the excluded CREATEs were acked in place (no member wanted them),
+    # so the journal still trims completely
+    assert logs["mdt0"].first_index == 11
+
+
+def test_resumed_stream_remaps_with_inherited_flags():
+    """The local remap of a resumed stream follows the *effective*
+    (inherited) projection: fields the parked spec never requested stay
+    absent, not zero-filled into existence."""
+    proxy, logs = mk_proxy(1)
+    worker = connect(proxy).subscribe("g", name="w0", flags=R.CLF_JOBID)
+    logs["mdt0"].log(rec(metrics=(1.5,)))
+    logs["mdt0"].log(rec(metrics=(2.5,)))
+    proxy.pump()
+    ((_, b),) = worker.fetch(1)
+    assert b.record(0).metrics is None          # not requested
+    worker.close(failed=True)
+    resumed = connect(proxy).resume("g", "w0")  # bare: inherit CLF_JOBID
+    ((_, b2),) = resumed.fetch(100)
+    assert b2.record(0).metrics is None         # still not fabricated
+    assert b2.record(0).jobid == b"job"
+
+
+def test_resume_false_is_honored_on_both_bindings(service):
+    """resume=False (never touch parked state) must behave identically
+    through the in-process and wire backends."""
+    svc, proxy, _ = service
+    for tag, target in (("local", proxy), ("wire", svc.address)):
+        name = f"w-{tag}"
+        worker = connect(target).subscribe("g2", name=name)
+        worker.close(failed=True)
+        wait_for(lambda: name in proxy.groups["g2"].parked)
+        with pytest.raises(SubscriptionError, match="parked state"):
+            connect(target).subscribe("g2", name=name, resume=False)
+        with pytest.raises(SubscriptionError, match="durable consumer name"):
+            connect(target).subscribe("g2", resume=True)   # no name
+
+
+def test_stream_commit_keeps_acks_across_a_failed_call():
+    proxy, logs = mk_proxy(1)
+    stream = connect(proxy).subscribe("g", auto_commit=False)
+    feed_types(logs, 5, [R.CL_CREATE])
+    proxy.pump()
+    drain_all(stream)
+    orig = stream.session._backend.commit
+    calls = []
+
+    def flaky(cid, acks):
+        calls.append(cid)
+        if len(calls) == 1:
+            raise ConnectionError("transient")
+        return orig(cid, acks)
+
+    stream.session._backend.commit = flaky
+    with pytest.raises(ConnectionError):
+        stream.commit()
+    assert stream.pending_commit == 5                   # kept, not lost
+    assert stream.commit() == 5                         # retry succeeds
+    proxy.flush_upstream()
+    assert logs["mdt0"].first_index == 6
+
+
+def test_fully_filtered_producer_still_trims():
+    """A producer whose records are ALL filtered by pushdown is trimmed
+    by pump() alone — in-place acks propagate upstream without any
+    consumer commit or explicit flush."""
+    proxy, logs = mk_proxy(1)
+    connect(proxy).subscribe("g", types={R.CL_CKPT_WRITE})
+    feed_types(logs, 10, [R.CL_CREATE])           # nothing matches
+    proxy.pump()
+    assert proxy.stats["filtered_out"] == 10
+    assert logs["mdt0"].first_index == 11         # trimmed, no flush call
+
+
+def test_requeue_returns_failed_batches_to_the_stream():
+    """Stream.requeue withdraws delivered-but-unprocessed batches from
+    the pending set AND hands them out again first on the next fetch —
+    a retrying consumer reprocesses instead of wedging or false-acking
+    them."""
+    proxy, logs = mk_proxy(1)
+    stream = connect(proxy).subscribe("g", auto_commit=False)
+    feed_types(logs, 6, [R.CL_CREATE])
+    proxy.pump()
+    batches = stream.fetch(100)
+    stream.requeue(batches[1:])                   # "handler failed" on #2+
+    kept = sum(len(b) for _, b in batches[:1])
+    assert stream.commit() == kept                # only the handled part
+    again = stream.fetch(100)                     # requeued come back first
+    assert [i for _, b in again for i in b.indices()] == \
+        [i for _, b in batches[1:] for i in b.indices()]
+    assert stream.commit() == 6 - kept
+    proxy.flush_upstream()
+    assert logs["mdt0"].first_index == 7
+
+
+def test_worker_poll_retries_failed_batches_without_false_acks():
+    """A _GroupWorker whose handler raises must neither acknowledge the
+    unprocessed records nor lose them: the next poll retries exactly
+    the same records (at-least-once for a live, retrying worker)."""
+    from repro.track.consumers import _GroupWorker
+
+    class Flaky(_GroupWorker):
+        def __init__(self, proxy):
+            super().__init__(proxy, "g")
+            self.fail = True
+            self.handled = []
+
+        def handle_batch(self, pid, batch):
+            if self.fail:
+                raise RuntimeError("db locked")
+            self.handled.extend(batch.indices())
+
+    proxy, logs = mk_proxy(1)
+    w = Flaky(proxy)
+    feed_types(logs, 5, [R.CL_CREATE])
+    proxy.pump()
+    with pytest.raises(RuntimeError):
+        w.poll()
+    proxy.flush_upstream()
+    assert logs["mdt0"].first_index == 1          # nothing falsely acked
+    w.fail = False
+    assert w.poll() == 5                          # same records, retried
+    assert w.handled == [1, 2, 3, 4, 5]
+    proxy.flush_upstream()
+    assert logs["mdt0"].first_index == 6          # now acked and trimmed
+    w.close()
+
+
+def test_straggler_survives_truncated_step_commit_metrics():
+    from repro.track.consumers import StragglerDetector
+    proxy, logs = mk_proxy(1)
+    det = StragglerDetector(proxy)
+    logs["mdt0"].log(rec(t=R.CL_STEP_COMMIT))             # no metrics
+    logs["mdt0"].log(rec(t=R.CL_STEP_COMMIT, metrics=(0.5,)))
+    proxy.pump()
+    det.poll()                                            # must not raise
+    det.close()
+
+
+def test_commit_unknown_producer_is_typed_error():
+    proxy, logs = mk_proxy(1)
+    stream = connect(proxy).subscribe("g", auto_commit=False)
+    feed_types(logs, 2, [R.CL_CREATE])
+    proxy.pump()
+    drain_all(stream)
+    with pytest.raises(KeyError, match="unknown producer"):
+        proxy.commit(stream.cid, {"mdt-typo": [1, 2]})
+    # no phantom tracker was created for the bogus producer id
+    assert all("mdt-typo" not in g.trackers for g in proxy.groups.values())
+    assert stream.commit() == 2
+
+
+def test_durable_name_conflict_and_detach():
+    proxy, logs = mk_proxy(1)
+    session = connect(proxy)
+    worker = session.subscribe("g", name="w0")
+    with pytest.raises(SubscriptionError, match="already attached"):
+        session.subscribe("g", name="w0")
+    worker.detach()                                 # graceful park
+    assert proxy.stats["parked"] == 1
+    resumed = session.resume("g", "w0")
+    assert resumed.resumed
+
+
+def test_remote_durable_resume_over_tcp(service):
+    """Durable park/resume across real connections: the socket dies,
+    the service parks the consumer, a new connection resumes it."""
+    svc, proxy, logs = service
+    survivor = connect(svc.address).subscribe("g")
+    worker = connect(svc.address).subscribe("g", name="w0")
+    for i in range(30):
+        logs["mdt0"].log(rec(oid=i))
+    wait_for(lambda: proxy.stats["dispatched"] >= 30)
+    got = [i for _, b in worker.fetch(10) for i in b.indices()]
+    assert got
+    worker.commit()
+    unacked = [i for _, b in worker.fetch(100) for i in b.indices()]
+    worker.close(failed=True)                       # drop the socket
+    wait_for(lambda: proxy.stats["parked"] == 1)
+    assert proxy.stats["redelivered"] == 0
+
+    resumed = connect(svc.address).resume("g", "w0")
+    assert resumed.resumed
+    assert resumed.resume_token == {"mdt0": max(got)}
+    replay = [i for _, b in resumed.fetch(100) for i in b.indices()]
+    assert replay == unacked
+    resumed.commit()
+    seen = set(got) | set(replay) | \
+        {i for _, i in drain_all(survivor)}
+    survivor.commit()
+    wait_for(lambda: logs["mdt0"].first_index == 31)
+    assert seen == set(range(1, 31))
+
+
+# ------------------------------------------------------------ typed errors
+def test_typed_errors_local():
+    proxy, _ = mk_proxy(1)
+    session = connect(proxy)
+    with pytest.raises(SubscriptionError):
+        session.subscribe(None)                     # persistent needs group
+    with pytest.raises(SubscriptionError):
+        Subscription(mode="ephemeral", name="w0")   # durable ephemeral
+    with pytest.raises(UnknownConsumerError, match="unknown or unsub"):
+        proxy.fetch_batches("nope")
+    with pytest.raises(UnknownConsumerError):
+        session.resume("g", "never-existed")
+    # typed errors remain catchable as the builtins the old API raised
+    with pytest.raises(KeyError):
+        proxy.commit("nope", {"mdt0": [1]})
+    with pytest.raises(ValueError):
+        session.subscribe("g", mode="bogus")
+
+
+def test_typed_errors_remote(service):
+    svc, proxy, _ = service
+    session = connect(svc.address)
+    with pytest.raises(UnknownConsumerError, match="unknown or unsub"):
+        session._backend.fetch("nope", 10)
+    with pytest.raises(SubscriptionError):
+        session.subscribe(None)
+    with pytest.raises(UnknownConsumerError):
+        session.resume("g", "never-existed")
+
+
+def test_unknown_op_and_version_are_typed(service):
+    svc, _, _ = service
+    session = connect(svc.address)
+    reply = session._backend.rpc.call({"op": "frobnicate"})
+    assert reply["err_type"] == "SessionError"
+    with pytest.raises(SessionError, match="unknown op"):
+        session._backend._call({"op": "frobnicate"})
+    with pytest.raises(SessionError, match="protocol version"):
+        session._backend._call({"op": "stats", "v": 99})
+
+
+def test_legacy_register_defaults_to_supported_flags(service):
+    """The subscribe-default divergence is gone: a legacy register with
+    no flags gets CLF_SUPPORTED, same as every other path."""
+    svc, proxy, _ = service
+    session = connect(svc.address)
+    reply = session._backend.rpc.call({"op": "register", "group": "g"})
+    assert proxy.consumers[reply["cid"]].flags == R.CLF_SUPPORTED
+    # and unknown bits are masked at the single enforcement point
+    cid2 = proxy.subscribe("g", flags=0xFFFF)
+    assert proxy.consumers[cid2].flags == R.CLF_SUPPORTED
+
+
+# ------------------------------------------------------------------ commit
+def test_commit_spans_producers_in_one_call():
+    proxy, logs = mk_proxy(3)
+    stream = connect(proxy).subscribe("g", auto_commit=False)
+    feed_types(logs, 5, [R.CL_CREATE])
+    proxy.pump()
+    drain_all(stream)
+    assert stream.pending_commit == 15
+    assert stream.commit() == 15                    # one call, 3 producers
+    proxy.flush_upstream()
+    assert all(log.first_index == 6 for log in logs.values())
+    assert stream.resume_token == {f"mdt{i}": 5 for i in range(3)}

@@ -125,7 +125,7 @@ def test_bootstrap_index_traversal(tmp_path):
     pump_all(proxy, workers)
     assert workers[0].query("SELECT COUNT(*) FROM events")[0][0] == 100
     # collaborative: every instance handled part of the traversal
-    handled = [proxy.consumers[w.reader.cid].delivered for w in workers]
+    handled = [proxy.consumers[w.stream.cid].delivered for w in workers]
     assert all(h > 0 for h in handled) and sum(handled) == 100
     for w in workers:
         w.close()
