@@ -9,7 +9,9 @@ at-least-once delivery, ephemeral readers and stream modules.
 
 from . import records
 from .ack import AckTracker
-from .errors import (SessionError, SubscriptionError,
+from .cluster import (LcapCluster, LcapClusterService, LocalShard,
+                      RemoteShard, fid_slot)
+from .errors import (ClusterError, SessionError, SubscriptionError,
                      UnknownConsumerError, UnknownProducerError)
 from .llog import Llog
 from .modules import (CancelCompensating, CoalesceHeartbeats,
@@ -18,14 +20,18 @@ from .proxy import EPHEMERAL, PERSISTENT, LcapProxy
 from .reader import LocalReader, RemoteReader
 from .records import RecordBatch
 from .server import LcapService
-from .session import Session, Stream, Subscription, connect
+from .session import (ClusterSession, FanInStream, Session, Stream,
+                      Subscription, connect)
 
 __all__ = [
     "records", "RecordBatch", "AckTracker", "Llog", "LcapProxy",
     "LcapService", "PERSISTENT", "EPHEMERAL",
+    "LcapCluster", "LcapClusterService", "LocalShard", "RemoteShard",
+    "fid_slot",
     "connect", "Session", "Stream", "Subscription",
+    "ClusterSession", "FanInStream",
     "SessionError", "SubscriptionError", "UnknownConsumerError",
-    "UnknownProducerError",
+    "UnknownProducerError", "ClusterError",
     "LocalReader", "RemoteReader",        # deprecated shims
     "CancelCompensating", "CoalesceHeartbeats", "ReorderByTarget",
     "TypeFilter",

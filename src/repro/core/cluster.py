@@ -1,0 +1,544 @@
+"""Sharded LCAP cluster — horizontal fan-out of the changelog proxy.
+
+The paper's headline claim is *distributed* changelog processing; a
+single ``LcapProxy`` serializes every producer through one dispatch
+loop and one ingest buffer.  ``LcapCluster`` puts N independent proxy
+shards behind one coordinator:
+
+- **FID-hash routing**: every record is routed to a shard by a stable
+  hash of its target FID (``fid_slot``), so the ``cr_prev`` chain of
+  one target always lands on the same shard and per-target ordering is
+  preserved.  The hash maps FIDs onto a fixed ring of *slots*; slots
+  map onto shards, which is what makes failover re-routing a slot
+  reassignment instead of a re-hash.
+- **producers registered once**: the coordinator is the only registered
+  changelog reader per journal (resume-aware, like the proxy itself);
+  shards see push-fed ``PushSource`` producers and receive their record
+  subsets via ``LcapProxy.offer``.  A shard that owns none of a read
+  range still receives the watermark advance, so it never holds the
+  collective ack back.
+- **collective upstream ack**: each shard's per-journal watermark (the
+  ``PushSource.acked`` its own collective ack writes) is collected by
+  the coordinator; the minimum across live shards acknowledges the real
+  journal, which trims exactly as with a single proxy.
+- **shard failure**: ``kill_shard`` (called directly, or automatically
+  when a remote shard's connection dies) reassigns the dead shard's
+  slots round-robin to the survivors and re-reads its unacknowledged
+  backlog ``(acked, cursor]`` from the journals, re-offering it to the
+  new owners — at-least-once is preserved through single-shard loss
+  because the journal only ever trimmed below the dead shard's own
+  watermark.  (Records re-offered to survivors are covered by shard
+  memory, not the journal, until consumed: a *second* failure inside
+  that window can lose them — the documented cascading-failure caveat.)
+
+Shards are either in-process (``LocalShard`` over ``LcapProxy``) or
+independent daemons (``RemoteShard`` over the wire verbs ``add_source``
+/ ``offer`` / ``watermarks``; see ``run_shard_daemon``).  Consumers
+never talk to the coordinator: ``session.connect(cluster)`` (or a list
+of shard addresses) fans a ``Subscription`` in from every shard — one
+logical stream, per-(shard, producer) cursors, commits routed back to
+the owning shard (session.py, ``FanInStream``).
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from . import records as R
+from .errors import ClusterError
+from .llog import Llog
+from .proxy import LcapProxy
+from .transport import RpcClient
+
+DEFAULT_SLOTS = 64
+
+_MIX = 0x9E3779B97F4A7C15          # splitmix64 increment (golden ratio)
+_MASK = (1 << 64) - 1
+
+
+def fid_slot(key: Tuple[int, int, int], n_slots: int = DEFAULT_SLOTS) -> int:
+    """Stable slot of a target FID ``(seq, oid, ver)``.
+
+    A splitmix64-style integer mix — deterministic across processes and
+    runs (unlike ``hash()``), cheap, and uniform even for the dense
+    small integers FIDs are made of.
+    """
+    z = (key[0] * 0xBF58476D1CE4E5B9 ^ key[1] * 0x94D049BB133111EB
+         ^ key[2] * _MIX) & _MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK
+    return (z ^ (z >> 31)) % n_slots
+
+
+# ---------------------------------------------------------------------------
+# Shard handles: one protocol, two deployments.
+# ---------------------------------------------------------------------------
+class LocalShard:
+    """An in-process shard: direct method calls into an ``LcapProxy``."""
+
+    def __init__(self, proxy: LcapProxy, index: int = 0):
+        self.proxy = proxy
+        self.index = index
+
+    def add_source(self, pid: str, first: int = 1) -> None:
+        self.proxy.add_source(pid, first)
+
+    def offer_many(self, offers: Sequence[Tuple[str, R.RecordBatch, int]],
+                   ) -> Dict[str, int]:
+        for pid, batch, hi in offers:
+            self.proxy.offer(pid, batch, hi)
+        return self.watermarks()
+
+    # in-process: "send" applies immediately, "recv" reports the result
+    def offer_send(self, offers: Sequence[Tuple[str, R.RecordBatch, int]],
+                   ) -> None:
+        self._pending = self.offer_many(offers)
+
+    def offer_recv(self) -> Dict[str, int]:
+        pending, self._pending = getattr(self, "_pending", {}), {}
+        return pending
+
+    def watermarks(self) -> Dict[str, int]:
+        return dict(self.proxy.upstream_acked)
+
+    def pump(self) -> int:
+        moved = self.proxy.pump()
+        self.proxy.flush_upstream()
+        return moved
+
+    def backend(self):
+        from .session import _LocalBackend
+        return _LocalBackend(self.proxy)
+
+    def close(self) -> None:
+        pass
+
+
+class RemoteShard:
+    """A shard running as its own daemon, driven over the wire verbs.
+
+    Offers are *pipelined*: one flush of requests per routing round,
+    one read of replies — the coordinator never stalls a round-trip per
+    batch.  The last reply carries the shard's per-journal watermarks.
+    """
+
+    def __init__(self, address, index: int = 0):
+        self.address = address
+        self.index = index
+        self.rpc = RpcClient(tuple(address))
+        self._watermarks: Dict[str, int] = {}
+
+    def add_source(self, pid: str, first: int = 1) -> None:
+        self._call({"op": "add_source", "pid": pid, "first": first})
+
+    def offer_many(self, offers: Sequence[Tuple[str, R.RecordBatch, int]],
+                   ) -> Dict[str, int]:
+        self.offer_send(offers)
+        return self.offer_recv()
+
+    def offer_send(self, offers: Sequence[Tuple[str, R.RecordBatch, int]],
+                   ) -> None:
+        """Fire this shard's burst without waiting, so every shard of
+        the cluster ingests its share of a routing round concurrently;
+        ``offer_recv`` drains the replies."""
+        self._inflight = 0
+        for pid, batch, hi in offers:
+            self.rpc.send_request({"op": "offer", "pid": pid,
+                                   "blob": batch.to_wire(), "hi": hi})
+            self._inflight += 1
+
+    def offer_recv(self) -> Dict[str, int]:
+        n, self._inflight = getattr(self, "_inflight", 0), 0
+        for _ in range(n):
+            reply = self.rpc.recv_reply()
+            if reply.get("err"):
+                raise ClusterError(reply["err"])
+            self._watermarks.update(reply.get("watermarks") or {})
+        return dict(self._watermarks)
+
+    def watermarks(self) -> Dict[str, int]:
+        reply = self._call({"op": "watermarks"})
+        self._watermarks.update(reply.get("watermarks") or {})
+        return dict(self._watermarks)
+
+    def pump(self) -> int:
+        return 0                          # the daemon's poller dispatches
+
+    def _call(self, msg):
+        reply = self.rpc.call(msg)
+        if reply.get("err"):
+            raise ClusterError(reply["err"])
+        return reply
+
+    def backend(self):
+        from .session import _WireBackend
+        return _WireBackend(tuple(self.address))
+
+    def close(self) -> None:
+        self.rpc.close()
+
+
+class LcapCluster:
+    """N proxy shards behind one coordinator; see the module docstring.
+
+    ``producers`` are registered once, with the coordinator.  Shards
+    are built in-process (``n_shards``) unless explicit handles are
+    passed (``shards=[RemoteShard(addr), ...]`` for daemons).
+    """
+
+    def __init__(self, producers: Dict[str, Llog], n_shards: int = 2,
+                 shards: Optional[Sequence] = None,
+                 n_slots: int = DEFAULT_SLOTS, batch_size: int = 1024,
+                 modules=None, **proxy_kwargs):
+        if shards is None:
+            shards = [LocalShard(LcapProxy({}, modules=list(modules or []),
+                                           batch_size=batch_size,
+                                           **proxy_kwargs), index=i)
+                      for i in range(n_shards)]
+        if not shards:
+            raise ClusterError("a cluster needs at least one shard")
+        self.shards = list(shards)
+        for i, shard in enumerate(self.shards):
+            shard.index = i
+        self.n_slots = n_slots
+        self.batch_size = batch_size
+        self.slot_owner: List[int] = [i % len(self.shards)
+                                      for i in range(n_slots)]
+        self.alive: List[bool] = [True] * len(self.shards)
+        self.journals: Dict[str, Llog] = {}
+        self.reader_ids: Dict[str, str] = {}
+        self.cursors: Dict[str, int] = {}       # next journal index to route
+        self.journal_acked: Dict[str, int] = {}
+        #: shard index -> (pid -> last known shard watermark)
+        self.shard_acked: List[Dict[str, int]] = [dict() for _ in self.shards]
+        self._lock = threading.RLock()
+        self.stats = {"routed": 0, "routing_rounds": 0, "shards_failed": 0,
+                      "failover_redelivered": 0, "journal_acks": 0}
+        for pid, log in producers.items():
+            self.add_producer(pid, log)
+
+    # ------------------------------------------------------------ topology
+    def shard_of(self, key: Tuple[int, int, int]) -> int:
+        """The shard currently owning target FID ``key``."""
+        return self.slot_owner[fid_slot(key, self.n_slots)]
+
+    @property
+    def live_shards(self) -> List:
+        return [s for i, s in enumerate(self.shards) if self.alive[i]]
+
+    # ------------------------------------------------------------ producers
+    def add_producer(self, pid: str, log: Llog) -> None:
+        """Register journal ``pid`` once, with the coordinator; every
+        shard gains a push-fed source for it.  Like the single proxy
+        (``Llog.attach_reader``), a fresh coordinator owes acks for the
+        journal's whole live backlog, and a restarted one resumes at
+        its own acked watermark, not at a trim point another reader may
+        be holding back."""
+        with self._lock:
+            rid, start = log.attach_reader(f"lcap-{pid}")
+            self.journals[pid] = log
+            self.reader_ids[pid] = rid
+            self.cursors[pid] = start
+            self.journal_acked[pid] = start - 1
+            for i, shard in enumerate(self.shards):
+                if self.alive[i]:
+                    self._shard_call(i, shard.add_source, pid, start)
+                self.shard_acked[i].setdefault(pid, start - 1)
+
+    # -------------------------------------------------------------- routing
+    def _partition(self, batch: R.RecordBatch) -> List[List[int]]:
+        """Row indices per shard, in batch (= journal) order."""
+        rows: List[List[int]] = [[] for _ in self.shards]
+        owner = self.slot_owner
+        n_slots = self.n_slots
+        slot = fid_slot
+        for i, key in enumerate(batch.keys()):
+            rows[owner[slot(key, n_slots)]].append(i)
+        return rows
+
+    def _route(self) -> int:
+        """One routing round: read every journal forward, partition by
+        FID slot, push one offer per (shard, journal batch) — including
+        empty ones, which carry the watermark advance."""
+        n = 0
+        offers: List[List[Tuple[str, R.RecordBatch, int]]] = \
+            [[] for _ in self.shards]
+        for pid, log in self.journals.items():
+            while True:
+                batch = log.read(self.cursors[pid], self.batch_size)
+                if not batch:
+                    break
+                got = len(batch)
+                hi = batch.packed_index(got - 1)
+                self.cursors[pid] = hi + 1
+                rows = self._partition(batch)
+                for i, shard_rows in enumerate(rows):
+                    if self.alive[i]:
+                        offers[i].append((pid, batch.select(shard_rows), hi))
+                n += got
+                if got < self.batch_size:
+                    break
+        # two-phase: fire every shard's burst first, then drain the
+        # replies — the shards ingest their shares concurrently instead
+        # of the coordinator serializing on one shard at a time
+        sent = []
+        for i, shard_offers in enumerate(offers):
+            if shard_offers and self.alive[i]:
+                self._shard_call(i, self.shards[i].offer_send, shard_offers)
+                if self.alive[i]:          # send did not fail the shard
+                    sent.append(i)
+        for i in sent:
+            if self.alive[i]:
+                wm = self._shard_call(i, self.shards[i].offer_recv)
+                if wm is not None:
+                    self.shard_acked[i].update(wm)
+        self.stats["routed"] += n
+        self.stats["routing_rounds"] += 1
+        return n
+
+    def _shard_call(self, i: int, fn, *args):
+        """Invoke a shard operation; a dead connection — or a shard
+        that rejects the verb (``ClusterError`` from an error reply) —
+        fails the shard over (slots re-routed, backlog redelivered)
+        instead of killing the coordinator's routing loop."""
+        try:
+            return fn(*args)
+        except (ConnectionError, OSError, ClusterError) as exc:
+            self.kill_shard(i, reason=str(exc))
+            return None
+
+    def pump(self, pump_shards: bool = True) -> int:
+        """One routing round; with ``pump_shards`` (in-process shards)
+        also one dispatch cycle per shard, then collective-ack
+        propagation."""
+        with self._lock:
+            moved = self._route()
+            if pump_shards:
+                for i, shard in enumerate(self.shards):
+                    if self.alive[i]:
+                        got = self._shard_call(i, shard.pump)
+                        moved += got or 0
+                self._collect_watermarks()
+            self._ack_journals()
+            return moved
+
+    # ------------------------------------------------------------- acks
+    def _collect_watermarks(self) -> None:
+        for i, shard in enumerate(self.shards):
+            if self.alive[i]:
+                wm = self._shard_call(i, shard.watermarks)
+                if wm is not None:
+                    self.shard_acked[i].update(wm)
+
+    def collect_watermarks(self) -> None:
+        """Refresh every live shard's per-journal watermark (the push
+        sources' ``acked``) and propagate the collective minimum."""
+        with self._lock:
+            self._collect_watermarks()
+            self._ack_journals()
+
+    def _ack_journals(self) -> None:
+        live = [i for i in range(len(self.shards)) if self.alive[i]]
+        if not live:
+            return
+        for pid, log in self.journals.items():
+            horizon = min(self.shard_acked[i].get(pid,
+                                                  self.journal_acked[pid])
+                          for i in live)
+            if horizon > self.journal_acked[pid]:
+                log.ack(self.reader_ids[pid], horizon)
+                self.journal_acked[pid] = horizon
+                self.stats["journal_acks"] += 1
+
+    # ------------------------------------------------------------ failover
+    def kill_shard(self, index: int, reason: str = "killed") -> None:
+        """Fail shard ``index``: its slots are re-routed round-robin to
+        the survivors and its unacknowledged backlog is re-read from the
+        journals and re-offered to the new owners (at-least-once — the
+        journal never trimmed past the dead shard's own watermark)."""
+        with self._lock:
+            if not self.alive[index]:
+                return
+            self.alive[index] = False
+            self.stats["shards_failed"] += 1
+            survivors = [i for i in range(len(self.shards))
+                         if self.alive[i]]
+            if not survivors:
+                raise ClusterError(
+                    f"shard {index} failed ({reason}); no shards left")
+            moved = {s for s, o in enumerate(self.slot_owner) if o == index}
+            rr = itertools.cycle(survivors)
+            for s in moved:
+                self.slot_owner[s] = next(rr)
+            redelivered = 0
+            for pid, log in self.journals.items():
+                lo = max(log.first_index,
+                         self.shard_acked[index].get(pid, 0) + 1)
+                end = self.cursors[pid]          # routed so far
+                offers: List[List[Tuple[str, R.RecordBatch, int]]] = \
+                    [[] for _ in self.shards]
+                while lo < end:
+                    batch = log.read(lo, self.batch_size)
+                    if not batch:
+                        break
+                    keep = [i for i, key in enumerate(batch.keys())
+                            if batch.packed_index(i) < end
+                            and fid_slot(key, self.n_slots) in moved]
+                    hi = batch.packed_index(len(batch) - 1)
+                    if keep:
+                        sub = batch.select(keep)
+                        by_shard: Dict[int, List[int]] = {}
+                        for j, key in enumerate(sub.keys()):
+                            owner = self.slot_owner[fid_slot(key,
+                                                             self.n_slots)]
+                            by_shard.setdefault(owner, []).append(j)
+                        for owner, rows in by_shard.items():
+                            offers[owner].append((pid, sub.select(rows),
+                                                  sub.packed_index(rows[-1])))
+                        redelivered += len(keep)
+                    lo = hi + 1
+                for i, shard_offers in enumerate(offers):
+                    if shard_offers and self.alive[i]:
+                        self._shard_call(i, self.shards[i].offer_many,
+                                         shard_offers)
+            self.stats["failover_redelivered"] += redelivered
+            # the dead shard no longer gates the collective ack
+            self._ack_journals()
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self) -> None:
+        for i, shard in enumerate(self.shards):
+            try:
+                shard.close()
+            except OSError:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# Daemon deployment.
+# ---------------------------------------------------------------------------
+def run_shard_daemon(conn, shard_index: int, shard_count: int,
+                     host: str = "127.0.0.1", port: int = 0,
+                     poll_interval: float = 0.002,
+                     proxy_kwargs: Optional[dict] = None,
+                     local_groups: Optional[Sequence[Tuple[str, int]]] = None,
+                     local_flags: Optional[int] = None) -> None:
+    """Entry point for a shard daemon process (multiprocessing target).
+
+    Builds an empty push-fed ``LcapProxy`` wrapped in an ``LcapService``
+    (so the shard serves subscribe/fetch/commit *and* the cluster verbs
+    on its own port), reports ``(host, port)`` through ``conn``, then
+    blocks until the parent sends anything (or the pipe closes).
+
+    ``local_groups`` optionally co-locates consumers with the shard
+    (the paper's policy-engine-per-host deployment, §III): for each
+    ``(group, members)`` the daemon subscribes that many members
+    through the in-process Session API and drains them in a local
+    thread — records then never cross the wire on the consume side.
+    On shutdown the daemon reports the drained record count back
+    through ``conn``.
+    """
+    import sys
+    from .server import LcapService
+    from .session import Subscription, connect
+    # a shard daemon interleaves three threads (poller dispatch, RPC
+    # handlers, optional local drainer); the default 5 ms GIL switch
+    # interval starves the short-lived offer/fetch handlers behind the
+    # compute-bound poller
+    sys.setswitchinterval(0.0005)
+    proxy = LcapProxy({}, **(proxy_kwargs or {}))
+    service = LcapService(proxy, host=host, port=port,
+                          poll_interval=poll_interval,
+                          shard_index=shard_index, shard_count=shard_count)
+    service.start()
+    stop = threading.Event()
+    drained = [0]
+    drainer = None
+    if local_groups:
+        session = connect(proxy)
+        streams = [session.subscribe(Subscription(
+            group=g, flags=local_flags, auto_commit=False))
+            for g, members in local_groups for _ in range(members)]
+
+        def _drain() -> None:
+            import time
+            while not stop.is_set():
+                moved = 0
+                for stream in streams:
+                    for _pid, batch in stream.fetch():
+                        moved += len(batch)
+                    stream.commit()
+                drained[0] += moved
+                if not moved:
+                    time.sleep(poll_interval)
+
+        drainer = threading.Thread(target=_drain, daemon=True)
+        drainer.start()
+    try:
+        conn.send(tuple(service.address))
+        try:
+            conn.recv()                   # parent says stop (or EOF)
+        except EOFError:
+            pass
+    finally:
+        stop.set()
+        if drainer is not None:
+            drainer.join(timeout=5)
+            try:
+                conn.send(drained[0])
+            except (OSError, BrokenPipeError):
+                pass
+        service.stop()
+
+
+class LcapClusterService:
+    """The cluster as a set of daemons in one process: each in-process
+    shard gets its own ``LcapService`` (own port, own poller — "each
+    shard runs as its own daemon"), and a distributor thread runs the
+    coordinator's routing/ack loop.  Consumers connect to
+    ``addresses`` (``session.connect(service)`` fans in)."""
+
+    def __init__(self, cluster: LcapCluster, host: str = "127.0.0.1",
+                 poll_interval: float = 0.002):
+        from .server import LcapService
+        self.cluster = cluster
+        self.poll_interval = poll_interval
+        self.services = []
+        for i, shard in enumerate(cluster.shards):
+            if not isinstance(shard, LocalShard):
+                raise ClusterError("LcapClusterService hosts in-process "
+                                   "shards; remote shards already are "
+                                   "daemons")
+            self.services.append(LcapService(
+                shard.proxy, host=host, port=0,
+                poll_interval=poll_interval,
+                shard_index=i, shard_count=len(cluster.shards)))
+        self._stop = threading.Event()
+        self._distributor = threading.Thread(target=self._route_loop,
+                                             daemon=True)
+
+    @property
+    def addresses(self) -> List[Tuple[str, int]]:
+        return [svc.address for svc in self.services]
+
+    def _route_loop(self) -> None:
+        import time
+        while not self._stop.is_set():
+            moved = self.cluster.pump(pump_shards=False)
+            self.cluster.collect_watermarks()
+            if not moved:
+                time.sleep(self.poll_interval)
+
+    def start(self) -> "LcapClusterService":
+        for svc in self.services:
+            svc.start()
+        self._distributor.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._distributor.join(timeout=5)
+        for svc in self.services:
+            svc.stop()

@@ -36,6 +36,11 @@ class UnknownProducerError(SessionError, KeyError):
         return RuntimeError.__str__(self)
 
 
+class ClusterError(SessionError):
+    """A sharded-cluster operation failed (no live shards, a shard verb
+    rejected, or a malformed cluster topology)."""
+
+
 #: reply ``err_type`` -> exception class (legacy names map onto the
 #: closest typed error so old servers still produce typed failures)
 WIRE_ERRORS: Dict[str, Type[SessionError]] = {
@@ -43,6 +48,7 @@ WIRE_ERRORS: Dict[str, Type[SessionError]] = {
     "SubscriptionError": SubscriptionError,
     "UnknownConsumerError": UnknownConsumerError,
     "UnknownProducerError": UnknownProducerError,
+    "ClusterError": ClusterError,
     "KeyError": UnknownConsumerError,
     "ValueError": SubscriptionError,
 }

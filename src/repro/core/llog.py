@@ -30,12 +30,13 @@ truncated final record (crash mid-append) is dropped on load.
 
 from __future__ import annotations
 
+import bisect
 import glob as _glob
 import json
 import os
 import struct
 import threading
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
 
 from . import records as R
 
@@ -84,6 +85,7 @@ class Llog:
         self.mask = set(mask) if mask is not None else None  # None = all
         self.segment_records = max(1, segment_records)
         self._segments: List[_Segment] = []
+        self._firsts: List[int] = []      # seg.first per segment (for bisect)
         self._first = 1                   # logical trim point (first live)
         self._next = 1
         self._prev_by_key: Dict[tuple, int] = {}
@@ -158,6 +160,7 @@ class Llog:
                 seg.data = bytes(seg.data)
             self._first = self._segments[0].first
             self._next = self._segments[-1].last + 1
+        self._firsts = [seg.first for seg in self._segments]
         if os.path.exists(self._sidecar()):
             with open(self._sidecar()) as fh:
                 meta = json.load(fh)
@@ -198,6 +201,7 @@ class Llog:
         seg = _Segment(self._next,
                        self._seg_path(self._next) if self.path else None)
         self._segments.append(seg)
+        self._firsts.append(seg.first)
         if self._segments[:-1]:
             self.stats["segments_rolled"] += 1
         return seg
@@ -234,6 +238,39 @@ class Llog:
             self._readers.pop(rid, None)
             self._trim_locked()
             self._persist_meta()
+
+    def attach_reader(self, name: str) -> Tuple[str, int]:
+        """Register (or re-attach) a *consuming* reader under ``name``
+        and return ``(rid, start index)``.
+
+        A brand-new consuming reader starts at the journal's first live
+        record and owes acknowledgements for all of it (position
+        ``first_index - 1`` — unlike ``register_reader``, whose new
+        readers only owe acks for records logged from then on).  An
+        existing reader resumes right after its *own* acked watermark,
+        never at a trim point a slower co-registered reader holds back,
+        and never before ``first_index``.  Both halves are what
+        at-least-once needs across restarts: backlog delivered but not
+        yet acked is re-ingested; backlog already acked is not."""
+        with self._lock:
+            if name not in self._readers:
+                self._readers[name] = self._first - 1
+                self._persist_meta()
+            return name, max(self._first, self._readers[name] + 1)
+
+    def has_reader(self, rid: str) -> bool:
+        with self._lock:
+            return rid in self._readers
+
+    def reader_position(self, rid: str) -> int:
+        """The highest index reader ``rid`` has acknowledged.  A restarted
+        reader resumes at ``max(first_index, reader_position + 1)`` —
+        records before its own watermark were already consumed, even when
+        a slower co-registered reader holds the trim point further back."""
+        with self._lock:
+            if rid not in self._readers:
+                raise KeyError(f"unknown reader {rid}")
+            return self._readers[rid]
 
     # -- producing -----------------------------------------------------------
     def _log_locked(self, rec: R.ChangelogRecord) -> Optional[int]:
@@ -291,7 +328,11 @@ class Llog:
                 start = self._first
             views: List[R.RecordBatch] = []
             want = max_records
-            for seg in self._segments:
+            # first segment that may hold ``start``: the last one whose
+            # first index is <= start — O(log n) with thousands of
+            # sealed segments instead of a whole-list scan
+            pos = bisect.bisect_right(self._firsts, start) - 1
+            for seg in self._segments[max(0, pos):]:
                 if want <= 0:
                     break
                 if seg.last < start or not len(seg):
@@ -331,6 +372,7 @@ class Llog:
         # segment, never a journal rewrite
         while self._segments and self._segments[0].last < self._first:
             seg = self._segments.pop(0)
+            self._firsts.pop(0)
             if len(self._segments) == 0 and self._fh is not None:
                 self._fh.close()
                 self._fh = None

@@ -15,7 +15,18 @@ Broker between N producers (each exposing an ``Llog``) and M consumers:
 - **collective acknowledgement**: a record is acknowledged upstream to
   the producer's journal only once every group has acknowledged it;
 - **at-least-once**: when a consumer dies, its in-flight records are
-  redelivered to surviving group members.
+  redelivered to surviving group members;
+- **per-group backpressure**: a group with a saturated member parks its
+  records (``Group.pending``, bounded by the outbox cap) while the
+  other groups keep draining — one slow consumer never stalls the rest
+  of the fleet;
+- **restart resume**: the proxy registers as a named changelog reader
+  per producer and, on restart, resumes at its *own* acked watermark —
+  never at a trim point a slower co-registered reader holds back;
+- **push-fed producers**: ``add_source``/``offer`` let a cluster
+  coordinator (cluster.py) route record batches in by FID hash instead
+  of the proxy pulling from a journal — the building block of the
+  sharded deployment.
 
 The unit of flow is a ``RecordBatch`` end to end: journals hand the
 proxy zero-copy batch views, stream modules restructure them without
@@ -64,6 +75,38 @@ EPHEMERAL = "ephemeral"
 _by_load = operator.attrgetter("load")   # Consumer.load, single definition
 
 
+class PushSource:
+    """Llog-protocol facade for a *push-fed* producer: a cluster
+    coordinator (cluster.py) routes already-read record batches into the
+    proxy with ``offer()`` instead of the proxy pulling from a journal.
+    Reads return nothing, and upstream acks are recorded here for the
+    coordinator to collect (the shard's per-journal watermark)."""
+
+    __slots__ = ("producer_id", "first_index", "last_index", "acked")
+
+    def __init__(self, pid: str, first: int = 1):
+        self.producer_id = pid
+        self.first_index = first
+        self.last_index = first - 1      # highest offered index
+        self.acked = first - 1           # this shard's upstream watermark
+
+    def has_reader(self, rid: str) -> bool:
+        return False
+
+    def register_reader(self, name=None, resume: bool = False) -> str:
+        return name or "push"
+
+    def attach_reader(self, name: str) -> Tuple[str, int]:
+        return name, self.first_index
+
+    def read(self, start: int, max_records: int = 1024) -> R.RecordBatch:
+        return R.RecordBatch.empty()     # push model: never pulled
+
+    def ack(self, rid: str, index: int) -> None:
+        if index > self.acked:
+            self.acked = index
+
+
 class Consumer:
     def __init__(self, cid: str, group: Optional[str], flags: int, mode: str,
                  types: Optional[Iterable[int]] = None,
@@ -96,7 +139,8 @@ class Group:
         self.trackers: Dict[str, AckTracker] = {}
         self.pending: Deque[Tuple[str, int, bytes]] = deque()  # no member yet
         self.durable: Dict[str, str] = {}    # durable name -> active cid
-        self.parked: Dict[str, Tuple[Consumer, float]] = {}  # name -> deadline
+        # durable name -> (parked consumer, resume deadline)
+        self.parked: Dict[str, Tuple[Consumer, float]] = {}
 
     def tracker(self, pid: str) -> AckTracker:
         if pid not in self.trackers:
@@ -108,24 +152,29 @@ class LcapProxy:
     def __init__(self, producers: Dict[str, Llog],
                  modules: Optional[List[Module]] = None,
                  batch_size: int = 1024, max_buffer: int = 1 << 20,
-                 outbox_cap: int = 1 << 16, resume_ttl: float = 30.0):
+                 outbox_cap: int = 1 << 16, resume_ttl: float = 30.0,
+                 dispatch_quantum: Optional[int] = None):
         self.producers = dict(producers)
         self.modules = list(modules or [])
         self.batch_size = batch_size
         self.max_buffer = max_buffer          # records, across buffered batches
         self.outbox_cap = outbox_cap
         self.resume_ttl = resume_ttl          # durable park window (seconds)
+        # records dispatched per _dispatch call (None = drain the whole
+        # buffer).  A server proxy sets a quantum so one pump never
+        # holds the lock across a huge buffer while fetch/commit
+        # requests from live consumers queue behind it.
+        self.dispatch_quantum = dispatch_quantum
         self._lock = threading.RLock()
         self._cid_seq = itertools.count(1)
+        self._ingest_rotation = itertools.count()  # producer fairness
+        self.reader_ids: Dict[str, str] = {}
+        self.cursors: Dict[str, int] = {}
+        self.ingested: Dict[str, int] = {}
+        self.upstream_acked: Dict[str, int] = {}
         # register as a regular changelog reader with every producer (§III)
-        self.reader_ids: Dict[str, str] = {
-            pid: log.register_reader(f"lcap-{pid}", resume=True)
-            for pid, log in self.producers.items()}
-        self.cursors: Dict[str, int] = {
-            pid: log.first_index for pid, log in self.producers.items()}
-        self.ingested: Dict[str, int] = {
-            pid: log.first_index - 1 for pid, log in self.producers.items()}
-        self.upstream_acked: Dict[str, int] = dict(self.ingested)
+        for pid, log in self.producers.items():
+            self._register_producer(pid, log)
         self.groups: Dict[str, Group] = {}
         self.consumers: Dict[str, Consumer] = {}
         self._buffer: Deque[Tuple[str, R.RecordBatch]] = deque()
@@ -136,15 +185,79 @@ class LcapProxy:
                       "filtered_out": 0, "parked": 0, "resumed": 0,
                       "resume_replayed": 0, "parks_expired": 0}
 
+    def _register_producer(self, pid: str, log: Llog) -> None:
+        """Register with ``log`` as the lcap reader and position the
+        ingest cursor (``Llog.attach_reader``).  A fresh proxy consumes
+        the journal's whole live backlog and owes acks for it; a
+        *restarted* proxy resumes at its own acked watermark, not at
+        the journal's ``first_index`` — another registered reader
+        lagging behind holds the trim point back, and re-ingesting
+        records this proxy already delivered and acked would duplicate
+        them to every group."""
+        rid, start = log.attach_reader(f"lcap-{pid}")
+        self.reader_ids[pid] = rid
+        self.cursors[pid] = start
+        self.ingested[pid] = start - 1
+        self.upstream_acked[pid] = start - 1
+
     # ------------------------------------------------------------------ API
     def add_producer(self, pid: str, log: Llog) -> None:
         with self._lock:
             self.producers[pid] = log
-            self.reader_ids[pid] = log.register_reader(f"lcap-{pid}",
-                                                       resume=True)
-            self.cursors[pid] = log.first_index
-            self.ingested[pid] = log.first_index - 1
-            self.upstream_acked[pid] = self.ingested[pid]
+            self._register_producer(pid, log)
+            # live ephemeral consumers connected before this producer
+            # joined: stamp their connection point, or ``since.get(pid,
+            # -1)`` hands them every record already in the journal —
+            # history, which §IV-B forbids
+            for cons in self.consumers.values():
+                if cons.mode == EPHEMERAL:
+                    cons.since[pid] = log.last_index  # type: ignore
+
+    def add_source(self, pid: str, first: int = 1) -> None:
+        """Register a push-fed producer: the records of journal ``pid``
+        arrive via ``offer()`` (routed there by a cluster coordinator)
+        instead of being pulled.  ``first`` is the journal index the
+        feed starts at; the shard's collective watermark for the journal
+        is collected from the source's ``acked``."""
+        self.add_producer(pid, PushSource(pid, first))
+
+    def offer(self, pid: str, batch: R.RecordBatch,
+              hi: Optional[int] = None) -> int:
+        """Push a batch of journal ``pid`` records into the ingest
+        buffer (the cluster-routing counterpart of ``_ingest``).
+
+        ``hi`` is the highest journal index *scanned* on the caller's
+        side — it may exceed the batch's own highest index when the
+        records in between were routed to other shards, and the ingest
+        watermark advances to it so a shard that owns none of a range
+        still lets the collective upstream ack progress.  Re-offering
+        records below the watermark (failover redelivery) never moves
+        it backwards.  Returns the number of records admitted."""
+        with self._lock:
+            src = self.producers.get(pid)
+            if src is None:
+                raise UnknownProducerError(f"unknown producer {pid!r}")
+            got = len(batch)
+            if hi is None:
+                if not got:
+                    return 0
+                hi = batch.packed_index(got - 1)
+            if isinstance(src, PushSource) and hi > src.last_index:
+                src.last_index = hi
+            if got:
+                kept = self._admit_locked(pid, batch, hi)
+            else:                          # bare watermark advance
+                kept = 0
+                if hi > self.ingested.get(pid, -1):
+                    self.ingested[pid] = hi
+            self.stats["ingested"] += got
+            if not kept:
+                # a pure watermark advance (or a fully module-dropped
+                # batch) completes this shard's position without any
+                # consumer commit — propagate, exactly like the
+                # filter-pushdown path in pump()
+                self._flush_upstream_locked()
+            return kept
 
     def subscribe(self, group: Optional[str], flags: Optional[int] = None,
                   mode: str = PERSISTENT, cid: Optional[str] = None,
@@ -371,7 +484,14 @@ class LcapProxy:
     # ------------------------------------------------------------- ingest
     def _ingest(self) -> int:
         n = 0
-        for pid, log in self.producers.items():
+        # rotate the producer order across pumps: draining dict order
+        # first starves late producers whenever the buffer cap is hit
+        # before the loop reaches them
+        items = list(self.producers.items())
+        if len(items) > 1:
+            k = next(self._ingest_rotation) % len(items)
+            items = items[k:] + items[:k]
+        for pid, log in items:
             while self._buffered < self.max_buffer:
                 batch = log.read(self.cursors[pid], self.batch_size)
                 if not batch:
@@ -379,22 +499,33 @@ class LcapProxy:
                 got = len(batch)
                 hi = batch.packed_index(got - 1)   # journal order: ascending
                 self.cursors[pid] = hi + 1
-                kept = batch
-                for mod in self.modules:
-                    kept = mod(kept)
-                if not isinstance(kept, R.RecordBatch):  # legacy list module
-                    kept = R.RecordBatch.from_records(kept)
-                self.stats["dropped_by_modules"] += got - len(kept)
-                if len(kept):
-                    self._buffer.append((pid, kept))
-                    self._buffered += len(kept)
-                self.ingested[pid] = hi
-                self.stats["batches_ingested"] += 1
+                self._admit_locked(pid, batch, hi)
                 n += got
                 if got < self.batch_size:
                     break
         self.stats["ingested"] += n
         return n
+
+    def _admit_locked(self, pid: str, batch: R.RecordBatch, hi: int) -> int:
+        """Run the stream modules over ``batch`` and buffer the
+        survivors; advance the ingest watermark to ``hi`` (the highest
+        *scanned* journal index, which may exceed the highest kept one).
+        Shared by the pull path (``_ingest``) and the push path
+        (``offer``); returns how many records were kept."""
+        got = len(batch)
+        kept = batch
+        for mod in self.modules:
+            kept = mod(kept)
+        if not isinstance(kept, R.RecordBatch):      # legacy list module
+            kept = R.RecordBatch.from_records(kept)
+        self.stats["dropped_by_modules"] += got - len(kept)
+        if len(kept):
+            self._buffer.append((pid, kept))
+            self._buffered += len(kept)
+        if hi > self.ingested.get(pid, -1):
+            self.ingested[pid] = hi
+        self.stats["batches_ingested"] += 1
+        return len(kept)
 
     # ----------------------------------------------------------- dispatch
     def _hand_to(self, cons: Consumer, pid: str, idx: int, buf: bytes) -> None:
@@ -420,18 +551,34 @@ class LcapProxy:
         cons = min(want, key=_by_load)           # least-loaded (§III-A)
         self._hand_to(cons, pid, idx, buf)
 
+    def _saturated(self, grp: Group) -> bool:
+        cap = self.outbox_cap
+        return any(len(m.outbox) >= cap
+                   for m in grp.members.values() if m.alive)
+
     def _dispatch(self) -> int:
         n = 0
         cap = self.outbox_cap
         groups = list(self.groups.values())
-        persistent = [c for c in self.consumers.values()
-                      if c.mode == PERSISTENT and c.alive]
         ephemerals = [c for c in self.consumers.values()
                       if c.mode == EPHEMERAL and c.alive]
-        # backpressure: never dispatch into a saturated persistent
-        # consumer.  Checked once at entry; afterwards O(1) per record
-        # (only an outbox we just appended to can newly saturate).
-        if any(len(c.outbox) >= cap for c in persistent):
+        # backpressure is per *group*: a group with a saturated member
+        # parks its records under grp.pending while the other groups
+        # keep draining.  Groups that have recovered drain their parked
+        # backlog first (journal order is older than the buffer).
+        for g in groups:
+            while g.pending and not self._saturated(g):
+                pid, idx, buf = g.pending.popleft()
+                self._dispatch_to_group(g, pid, idx, buf)
+        n_sat = 0
+        states_sat = {}
+        for g in groups:
+            states_sat[g.name] = s = self._saturated(g)
+            n_sat += s
+        # every group saturated: stall the whole dispatch — requeued
+        # batch views are cheaper than per-record parked copies, and
+        # nothing could drain anyway (ephemerals wait too, as before)
+        if groups and n_sat == len(groups):
             return 0
         pflags = R.packed_flags
         remap = R.remap_cached
@@ -446,18 +593,22 @@ class LcapProxy:
 
         dispatched = 0
         filtered_out = 0
+        halt = False
+        quantum = self.dispatch_quantum
         while self._buffer:
             pid, batch = self._buffer.popleft()
             self._buffered -= len(batch)
             # per-(batch, group) state — membership cannot change while
-            # the proxy lock is held: (group, tracker, live members,
-            # pushdown active, rtype -> eligible-members cache)
+            # the proxy lock is held: [group, tracker, live members,
+            # pushdown active, rtype -> eligible-members cache,
+            # saturated]
             states = []
             for g in groups:
                 live = [m for m in g.members.values() if m.alive]
-                states.append((g, g.tracker(pid), live,
-                               any(m.types is not None for m in live), {}))
-            need_type = any(filt for _g, _t, _l, filt, _c in states) or \
+                states.append([g, g.tracker(pid), live,
+                               any(m.types is not None for m in live), {},
+                               states_sat[g.name]])
+            need_type = any(st[3] for st in states) or \
                 any(c.types is not None for c in ephemerals)
             packed_index = batch.packed_index
             packed_type = batch.packed_type
@@ -470,13 +621,24 @@ class LcapProxy:
                 # pushdown means a record may reach no outbox at all:
                 # materialize the packed bytes only on first real use
                 buf = None
-                full = False
-                for grp, tracker, live, filtered, eligible in states:
+                for st in states:
+                    grp, tracker, live, filtered, eligible, full_g = st
                     tracker.deliver(idx)
-                    if not live:
+                    if not live or full_g:
+                        # no member yet, or per-group backpressure:
+                        # park for this group alone; drained on join /
+                        # recovery.  A group whose parked backlog
+                        # reaches the outbox cap halts the whole
+                        # dispatch: beyond that window the healthy
+                        # groups intentionally degrade to a trickle
+                        # (one record per pump) rather than let parked
+                        # copies grow unboundedly — operators should
+                        # fail or expire a consumer stuck that long.
                         if buf is None:
                             buf = packed(i)
                         grp.pending.append((pid, idx, buf))
+                        if full_g and len(grp.pending) >= cap:
+                            halt = True
                         continue
                     if filtered:
                         want = eligible.get(rtype)
@@ -500,7 +662,11 @@ class LcapProxy:
                     cons.delivered += 1
                     dispatched += 1
                     if len(cons.outbox) >= cap:
-                        full = True
+                        st[5] = True
+                        states_sat[grp.name] = True
+                        n_sat += 1
+                        if n_sat == len(groups):
+                            halt = True   # nobody left to drain for
                 for cons in ephemerals:
                     if idx <= cons.since.get(pid, -1):  # type: ignore
                         continue  # emitted before connection (§IV-B)
@@ -513,7 +679,8 @@ class LcapProxy:
                         buf = packed(i)
                     cons.outbox.append((pid, idx, stamp(cons, buf)))
                 n += 1
-                if full:
+                if halt or (quantum is not None and n >= quantum):
+                    halt = True
                     stop = i + 1
                     break
             if stop is not None:

@@ -33,14 +33,20 @@ from typing import Dict
 
 from .errors import SessionError
 from .proxy import LcapProxy
+from .records import RecordBatch
 from .transport import PROTOCOL_VERSION, RpcServer
 
 
 class LcapService:
     def __init__(self, proxy: LcapProxy, host: str = "127.0.0.1",
-                 port: int = 0, poll_interval: float = 0.002):
+                 port: int = 0, poll_interval: float = 0.002,
+                 shard_index: int = None, shard_count: int = None):
         self.proxy = proxy
         self.poll_interval = poll_interval
+        # cluster awareness: a shard daemon stamps its position into
+        # subscribe replies so fan-in clients can sanity-check topology
+        self.shard_index = shard_index
+        self.shard_count = shard_count
         self._stop = threading.Event()
         self.server = RpcServer(self._handle, self._disconnected, host, port)
         self.address = self.server.address
@@ -61,7 +67,22 @@ class LcapService:
                     types=msg.get("types"), name=msg.get("name"),
                     resume=True if op == "resume" else msg.get("resume"))
                 session.setdefault("cids", set()).add(info["cid"])
+                if self.shard_index is not None:   # cluster-aware reply
+                    info = {**info, "shard": self.shard_index,
+                            "shards": self.shard_count}
                 return {"v": PROTOCOL_VERSION, **info}
+            if op == "add_source":
+                self.proxy.add_source(msg["pid"], msg.get("first", 1))
+                return {"ok": True}
+            if op == "offer":
+                admitted = self.proxy.offer(
+                    msg["pid"], RecordBatch.from_wire(msg["blob"]),
+                    msg.get("hi"))
+                return {"admitted": admitted,
+                        "watermarks": dict(self.proxy.upstream_acked)}
+            if op == "watermarks":
+                self.proxy.flush_upstream()
+                return {"watermarks": dict(self.proxy.upstream_acked)}
             if op == "register":      # legacy readers; same flag default
                 cid = self.proxy.subscribe(msg.get("group"),
                                            msg.get("flags"),

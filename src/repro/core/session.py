@@ -320,6 +320,253 @@ class Stream:
         self.session._forget(self)
 
 
+def _make_spec(subscription: Union[Subscription, str, None],
+               spec_kwargs: Dict) -> Subscription:
+    """A ``Subscription``, or one built from kwargs (a plain string is
+    shorthand for the group name) — shared by both session kinds."""
+    if isinstance(subscription, Subscription):
+        if spec_kwargs:
+            raise SubscriptionError("pass either a Subscription or "
+                                    "spec kwargs, not both")
+        return subscription
+    return Subscription(group=subscription, **spec_kwargs)
+
+
+class FanInStream:
+    """One logical stream over every shard of a cluster.
+
+    A ``Subscription`` against a cluster attaches on each live shard;
+    this facade owns one child ``Stream`` per shard and presents the
+    single-stream surface: ``fetch``/iteration round-robin the shards,
+    cursors stay per-(shard, producer) in the children, and ``commit``
+    routes each batch's acknowledgement back to the shard that owns it
+    (the child that delivered it) — never broadcast.
+
+    A shard that dies mid-session is dropped (its index lands in
+    ``lost``); its unacknowledged records are re-routed by the cluster
+    coordinator to the surviving shards, so the group still sees them
+    (at-least-once) through the remaining children.
+    """
+
+    def __init__(self, session: "ClusterSession", spec: Subscription,
+                 children: List[Tuple[int, Stream]]):
+        self.session = session
+        self.spec = spec
+        self._children = list(children)        # [(shard index, Stream)]
+        self._rr = 0
+        self._sources: Dict[int, Stream] = {}  # id(batch) -> owning child
+        self.lost: List[int] = []
+
+    # -- topology ------------------------------------------------------------
+    @property
+    def shards(self) -> List[int]:
+        return [i for i, _ in self._children]
+
+    @property
+    def resumed(self) -> bool:
+        return any(s.resumed for _, s in self._children)
+
+    @property
+    def resume_token(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for _, s in self._children:
+            for pid, idx in s.resume_token.items():
+                out[pid] = max(out.get(pid, 0), idx)
+        return out
+
+    @property
+    def cursors(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for _, s in self._children:
+            for pid, idx in s.cursors.items():
+                out[pid] = max(out.get(pid, 0), idx)
+        return out
+
+    @property
+    def shard_cursors(self) -> Dict[int, Dict[str, int]]:
+        """Per-(shard, producer) delivery cursors."""
+        return {i: dict(s.cursors) for i, s in self._children}
+
+    @property
+    def pending_commit(self) -> int:
+        return sum(s.pending_commit for _, s in self._children)
+
+    # -- failure handling ----------------------------------------------------
+    def _drop(self, pair: Tuple[int, Stream]) -> None:
+        if pair in self._children:
+            self._children.remove(pair)
+            self.lost.append(pair[0])
+
+    def _live(self) -> List[Tuple[int, Stream]]:
+        dead = [p for p in self._children
+                if not self.session._shard_alive(p[0])]
+        for p in dead:
+            self._drop(p)
+        return self._children
+
+    # -- delivery ------------------------------------------------------------
+    def fetch(self, max_records: Optional[int] = None,
+              ) -> List[Tuple[str, R.RecordBatch]]:
+        """Drain up to ``max_records`` across the shards, round-robin so
+        one busy shard cannot starve the others.  Every returned batch
+        becomes commit-pending on its owning shard."""
+        cap = max_records or self.spec.max_records
+        out: List[Tuple[str, R.RecordBatch]] = []
+        children = self._live()
+        taken = 0
+        for k in range(len(children)):
+            if taken >= cap:
+                break
+            pair = children[(self._rr + k) % len(children)]
+            try:
+                pairs = pair[1].fetch(cap - taken)
+            except (ConnectionError, OSError):
+                self._drop(pair)
+                continue
+            for pid, batch in pairs:
+                self._sources[id(batch)] = pair[1]
+                out.append((pid, batch))
+                taken += len(batch)
+        if children:
+            self._rr = (self._rr + 1) % max(1, len(children))
+        return out
+
+    def __iter__(self) -> Iterator[Tuple[str, R.RecordBatch]]:
+        return self
+
+    def __next__(self) -> Tuple[str, R.RecordBatch]:
+        """Round-robin the child iterators; each child keeps its own
+        auto-commit contract (a batch is acknowledged one fetch round
+        after it was yielded).  Stops when every shard is drained."""
+        children = self._live()
+        for k in range(len(children)):
+            pair = children[(self._rr + k) % len(children)]
+            try:
+                item = next(pair[1])
+            except StopIteration:
+                continue
+            except (ConnectionError, OSError):
+                self._drop(pair)
+                continue
+            self._sources[id(item[1])] = pair[1]   # requeue routing
+            self._rr = (self._rr + k + 1) % max(1, len(self._live()))
+            return item
+        raise StopIteration
+
+    def records(self) -> Iterator[Tuple[str, R.ChangelogRecord]]:
+        for pid, batch in self:
+            for i in range(len(batch)):
+                yield pid, batch.record(i)
+
+    # -- acknowledgement -----------------------------------------------------
+    def requeue(self, pairs: List[Tuple[str, R.RecordBatch]]) -> None:
+        """Hand unprocessed batches back to their owning shard's stream
+        (withdrawn from commit-pending, redelivered first).  Batches of
+        one shard are requeued in one call so their relative order is
+        preserved."""
+        by_child: Dict[int, Tuple[Stream, List]] = {}
+        for pid, batch in pairs:
+            child = self._sources.get(id(batch))
+            if child is None:
+                raise SessionError("requeue of a batch this stream did "
+                                   "not deliver")
+            by_child.setdefault(id(child), (child, []))[1].append(
+                (pid, batch))
+        for child, child_pairs in by_child.values():
+            child.requeue(child_pairs)
+
+    def commit(self) -> int:
+        """One logical commit: each shard receives exactly the
+        acknowledgements for the records it delivered.  Returns the
+        total acknowledged; a dead shard's pending acks are dropped
+        (the cluster redelivers its records — at-least-once)."""
+        total = 0
+        for pair in list(self._children):
+            try:
+                total += pair[1].commit()
+            except (ConnectionError, OSError):
+                self._drop(pair)
+        self._sources.clear()
+        return total
+
+    # -- lifecycle -----------------------------------------------------------
+    def detach(self) -> None:
+        for pair in list(self._children):
+            try:
+                pair[1].detach()
+            except (ConnectionError, OSError):
+                self._drop(pair)
+
+    def close(self, failed: bool = False) -> None:
+        for pair in list(self._children):
+            try:
+                pair[1].close(failed=failed)
+            except (ConnectionError, OSError):
+                self._drop(pair)
+
+
+class ClusterSession:
+    """A connection to a sharded cluster: one child ``Session`` per
+    shard, one declarative surface.  ``subscribe``/``resume`` return a
+    ``FanInStream`` that spans every live shard."""
+
+    def __init__(self, sessions: List[Tuple[int, Session]],
+                 alive=None):
+        self._sessions = list(sessions)
+        self._alive = alive                  # callable: shard index -> bool
+
+    def _shard_alive(self, index: int) -> bool:
+        return self._alive is None or self._alive(index)
+
+    def subscribe(self, subscription: Union[Subscription, str, None] = None,
+                  *, resume: Optional[bool] = None,
+                  **spec_kwargs) -> FanInStream:
+        spec = _make_spec(subscription, spec_kwargs)
+        children = []
+        for i, sess in self._sessions:
+            if self._shard_alive(i):
+                children.append((i, sess._open(spec, resume=resume)))
+        if not children:
+            raise SessionError("no live shards to subscribe on")
+        return FanInStream(self, spec, children)
+
+    def resume(self, group: str, name: str, **spec_kwargs) -> FanInStream:
+        spec = Subscription(group=group, name=name, **spec_kwargs)
+        return self.subscribe(spec, resume=True)
+
+    def stats(self) -> Dict:
+        """Summed proxy counters across live shards, plus the raw
+        per-shard dicts under ``"per_shard"``."""
+        per_shard: Dict[int, Dict] = {}
+        total: Dict[str, int] = {}
+        for i, sess in self._sessions:
+            if not self._shard_alive(i):
+                continue
+            try:
+                st = sess.stats()
+            except (ConnectionError, OSError):
+                continue
+            per_shard[i] = st
+            for key, val in st.items():
+                if isinstance(val, (int, float)):
+                    total[key] = total.get(key, 0) + val
+        total["per_shard"] = per_shard
+        return total
+
+    def close(self) -> None:
+        for _i, sess in self._sessions:
+            try:
+                sess.close()
+            except (ConnectionError, OSError):
+                pass
+
+    def __enter__(self) -> "ClusterSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
 class Session:
     """A connection to one changelog proxy, local or remote.  Make one
     with ``connect``; open any number of subscriptions on it."""
@@ -335,14 +582,8 @@ class Session:
         A durable name with parked state resumes transparently;
         ``resume=False`` refuses parked state instead (fresh identity or
         error), ``resume=True`` demands it (same as ``resume()``)."""
-        if isinstance(subscription, Subscription):
-            if spec_kwargs:
-                raise SubscriptionError("pass either a Subscription or "
-                                        "spec kwargs, not both")
-            spec = subscription
-        else:
-            spec = Subscription(group=subscription, **spec_kwargs)
-        return self._open(spec, resume=resume)
+        return self._open(_make_spec(subscription, spec_kwargs),
+                          resume=resume)
 
     def resume(self, group: str, name: str, **spec_kwargs) -> Stream:
         """Re-attach a durable consumer at its acknowledged cursor.
@@ -381,17 +622,43 @@ class Session:
         self.close()
 
 
-def connect(target: Union[LcapProxy, "LcapService", Address]) -> Session:
-    """Open a ``Session`` against an in-process ``LcapProxy``, a running
-    ``LcapService`` (its address is used), a ``(host, port)`` tuple, or
-    a ``"host:port"`` string — one client API over both bindings.
-    Close the session (or use it as a context manager) to release the
-    wire binding's connection; closing individual streams only
-    deregisters the consumers."""
-    if isinstance(target, LcapProxy):
-        return Session(_LocalBackend(target))
-    address = getattr(target, "address", target)   # LcapService duck-type
+def _parse_address(address) -> Tuple[str, int]:
     if isinstance(address, str):
         host, _, port = address.rpartition(":")
-        address = (host, int(port))
-    return Session(_WireBackend(tuple(address)))
+        return (host, int(port))
+    return tuple(address)
+
+
+def connect(target: Union[LcapProxy, "LcapService", "LcapCluster",
+                          "LcapClusterService", Address, List[Address]],
+            ) -> Union[Session, ClusterSession]:
+    """Open a ``Session`` (or, for sharded targets, a ``ClusterSession``
+    that transparently fans subscriptions in from every shard) — one
+    client API over every binding:
+
+    - ``LcapProxy``                  in-process, single proxy
+    - ``LcapService`` / ``(host, port)`` / ``"host:port"``   wire, single
+    - ``LcapCluster``                in-process shards, fan-in
+    - ``LcapClusterService``         its shard daemons' addresses, fan-in
+    - a *list* of addresses          one wire session per shard, fan-in
+
+    Close the session (or use it as a context manager) to release wire
+    connections; closing individual streams only deregisters consumers.
+    """
+    from .cluster import LcapCluster, LcapClusterService
+    if isinstance(target, LcapProxy):
+        return Session(_LocalBackend(target))
+    if isinstance(target, LcapCluster):
+        sessions = [(i, Session(shard.backend()))
+                    for i, shard in enumerate(target.shards)
+                    if target.alive[i]]
+        alive = target.alive
+        return ClusterSession(sessions, alive=lambda i: alive[i])
+    if isinstance(target, LcapClusterService):
+        target = target.addresses
+    if isinstance(target, list):           # a list of shard addresses
+        return ClusterSession(
+            [(i, Session(_WireBackend(_parse_address(a))))
+             for i, a in enumerate(target)])
+    address = getattr(target, "address", target)   # LcapService duck-type
+    return Session(_WireBackend(_parse_address(address)))

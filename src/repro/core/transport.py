@@ -122,6 +122,29 @@ class RpcClient:
             raise ConnectionError("proxy closed the connection")
         return reply
 
+    def send_request(self, msg: Dict[str, Any]) -> None:
+        """Fire a request without waiting; pair with ``recv_reply``.
+        The server handles one connection sequentially, so replies come
+        back in request order."""
+        send_msg(self._sock, msg)
+
+    def recv_reply(self) -> Dict[str, Any]:
+        reply = recv_msg(self._sock)
+        if reply is None:
+            raise ConnectionError("proxy closed the connection")
+        return reply
+
+    def call_pipelined(self, msgs) -> list:
+        """Send a burst of requests before reading any reply.  A
+        cluster coordinator routes one batch per (shard, journal) per
+        round — pipelining turns N round-trips into one flush and one
+        drain (and lets every *shard* process its burst concurrently
+        when the caller interleaves send/recv across connections)."""
+        msgs = list(msgs)
+        for msg in msgs:
+            self.send_request(msg)
+        return [self.recv_reply() for _ in msgs]
+
     def close(self) -> None:
         try:
             self._sock.close()

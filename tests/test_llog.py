@@ -263,3 +263,43 @@ def test_crash_recovery_truncates_partial_length_prefix(tmp_path):
     assert log3.last_index == 4                       # record 4 survived
     assert [R.unpack(b).index for b in log3.read(1, 10)] == [1, 2, 3, 4]
     log3.close()
+
+
+def test_read_binary_search_over_many_segments():
+    """Perf-fix regression: ``read`` locates the first live segment by
+    bisect instead of scanning the whole segment list; results must be
+    identical from every start index, across segment boundaries, after
+    trims, and past the end."""
+    log = Llog("mdt0", segment_records=4)
+    rid = log.register_reader()
+    for i in range(103):                      # 26 segments of 4
+        log.log(rec(oid=i))
+    assert log.segment_count > 20
+    for start in (1, 2, 4, 5, 47, 100, 103, 104, 500):
+        got = [R.unpack(b).index for b in log.read(start, 7)]
+        expect = [i for i in range(start, start + 7) if 1 <= i <= 103][:7]
+        assert got == expect, start
+    # trim mid-way: bisect must respect the new first live segment
+    log.ack(rid, 50)
+    assert log.first_index == 51
+    for start in (1, 50, 51, 52, 101):
+        got = [R.unpack(b).index for b in log.read(start, 5)]
+        lo = max(start, 51)
+        expect = [i for i in range(lo, lo + 5) if i <= 103]
+        assert got == expect, start
+    # and a read spanning many segments still concatenates in order
+    assert [R.unpack(b).index for b in log.read(60, 30)] == \
+        list(range(60, 90))
+
+
+def test_reader_position_and_has_reader():
+    log = Llog("mdt0")
+    rid = log.register_reader("lcap-mdt0")
+    assert log.has_reader("lcap-mdt0") and not log.has_reader("nope")
+    for i in range(5):
+        log.log(rec(oid=i))
+    assert log.reader_position(rid) == 0
+    log.ack(rid, 3)
+    assert log.reader_position(rid) == 3
+    with pytest.raises(KeyError):
+        log.reader_position("nope")
