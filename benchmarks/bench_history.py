@@ -1,0 +1,193 @@
+"""Compacted history tier: compaction ratio + bootstrap-from-history.
+
+A churn-heavy workload (files created, attr-spammed, renamed, and
+mostly unlinked — plus heartbeat chatter) runs through a proxy whose
+consumer group keeps up, so the journal trims aggressively and the
+trimmed segments land in the history tier.  Two configurations of the
+same workload are compared:
+
+- **raw**: ``HistoryStore(compactor=None)`` retains every trimmed
+  record — the "full-journal replay" a late consumer would otherwise
+  need;
+- **compacted**: the default ``Compactor`` coalesces per FID
+  (CREATE+UNLINK annihilation, rename folding, last-writer-wins
+  thinning).
+
+Measured: the record-count compaction ratio (raw records archived /
+compacted records retained) and the wall time for a replay-bootstrap
+subscription (``Subscription(replay=True)``) to reconstruct final
+state from each store.  Both bootstraps are checked to produce the
+*same state* as a from-the-start live consumer before their timings
+count.
+
+Run:  PYTHONPATH=src python benchmarks/bench_history.py
+      PYTHONPATH=src python benchmarks/bench_history.py --smoke
+
+``--smoke`` is the CI mode: a reduced workload that fails (exit 1)
+when the compaction ratio drops below {SMOKE_MIN_RATIO}x or the
+replay states diverge.  Writes BENCH_history.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import records as R                       # noqa: E402
+from repro.core.history import Compactor, HistoryStore    # noqa: E402
+from repro.core.llog import Llog                          # noqa: E402
+from repro.core.proxy import LcapProxy                    # noqa: E402
+from repro.core.session import Subscription, connect      # noqa: E402
+
+SMOKE_MIN_RATIO = 3.0
+
+
+def apply_state(state, r):
+    t, k = r.type, r.key()
+    if t in (R.CL_CREATE, R.CL_MKDIR):
+        state[k] = (r.name, None)
+    elif t in (R.CL_UNLINK, R.CL_RMDIR):
+        state.pop(k, None)
+    elif t == R.CL_RENAME:
+        if k in state:
+            state[k] = (r.name, state[k][1])
+    elif t == R.CL_SETATTR:
+        if k in state:
+            state[k] = (state[k][0], r.index)
+    elif t == R.CL_HEARTBEAT:
+        state[("hb",) + k] = r.metrics
+
+
+def churn(log, start: int, n_files: int, setattrs: int, unlink_pct: int,
+          hb_every: int) -> None:
+    """Deterministic churn: every file is created, attr-spammed and
+    renamed; ``unlink_pct``% die; hosts heartbeat throughout.
+    ``start`` offsets the FID range so successive calls continue the
+    namespace instead of recreating the same files."""
+    for i in range(start, start + n_files):
+        log.log(R.ChangelogRecord(type=R.CL_CREATE, tfid=R.Fid(1, i, 0),
+                                  pfid=R.Fid(1, 0, 0), name=b"f%07d" % i))
+        for _ in range(setattrs):
+            log.log(R.ChangelogRecord(type=R.CL_SETATTR,
+                                      tfid=R.Fid(1, i, 0),
+                                      pfid=R.Fid(1, 0, 0)))
+        log.log(R.ChangelogRecord(type=R.CL_RENAME, tfid=R.Fid(1, i, 0),
+                                  pfid=R.Fid(1, 0, 0), name=b"g%07d" % i,
+                                  sname=b"f%07d" % i, sfid=R.Fid(1, i, 0)))
+        if i % 100 < unlink_pct:
+            log.log(R.ChangelogRecord(type=R.CL_UNLINK, tfid=R.Fid(1, i, 0),
+                                      pfid=R.Fid(1, 0, 0),
+                                      name=b"g%07d" % i))
+        if i % hb_every == 0:
+            log.log(R.ChangelogRecord(type=R.CL_HEARTBEAT,
+                                      tfid=R.Fid(2, i % 16, 0),
+                                      metrics=(0.1 * (i % 7),)))
+
+
+def run_workload(workdir: str, compact: bool, n_files: int, setattrs: int,
+                 ) -> dict:
+    """One full pass: churn -> live consume (trims into history) ->
+    replay bootstrap; returns measurements."""
+    path = os.path.join(workdir, "compacted" if compact else "raw")
+    os.makedirs(path)
+    store = HistoryStore(os.path.join(path, "j.hist"),
+                         compactor=Compactor() if compact else None)
+    log = Llog("mdt0", path=os.path.join(path, "j"), segment_records=1024,
+               history=store)
+    proxy = LcapProxy({"mdt0": log})
+    live = connect(proxy).subscribe("live")
+    state_live = {}
+
+    t0 = time.perf_counter()
+    done = 0
+    batch_files = max(1, n_files // 50)
+    while done < n_files:
+        churn(log, done, min(batch_files, n_files - done), setattrs,
+              unlink_pct=80, hb_every=10)
+        done += batch_files
+        proxy.pump()
+        for _pid, b in live:
+            for x in range(len(b)):
+                apply_state(state_live, b.record(x))
+        live.commit()
+        proxy.flush_upstream()
+    ingest_s = time.perf_counter() - t0
+    total = log.last_index
+    store.compact_now()
+    retained = store.record_count
+
+    boot = connect(proxy).subscribe(Subscription(group="boot", replay=True,
+                                                 max_records=4096))
+    state_boot = {}
+    t0 = time.perf_counter()
+    while True:
+        pairs = boot.fetch(8192)
+        for _pid, b in pairs:
+            for x in range(len(b)):
+                apply_state(state_boot, b.record(x))
+        boot.commit()
+        if not pairs and not boot.replaying:
+            break
+    bootstrap_s = time.perf_counter() - t0
+    assert state_boot == state_live, "replay diverged from live state"
+    return {"records_total": total, "history_records": retained,
+            "replayed": boot.replayed, "ingest_s": round(ingest_s, 4),
+            "bootstrap_s": round(bootstrap_s, 4),
+            "bootstrap_rec_per_s": round(boot.replayed /
+                                         max(bootstrap_s, 1e-9))}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="history-tier compaction + replay-bootstrap benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: small workload, fail below the "
+                         f"{SMOKE_MIN_RATIO}x compaction floor")
+    ap.add_argument("--files", type=int, default=None)
+    ap.add_argument("--setattrs", type=int, default=6)
+    args = ap.parse_args()
+    n_files = args.files or (1500 if args.smoke else 12000)
+
+    workdir = tempfile.mkdtemp(prefix="bench_history.")
+    try:
+        raw = run_workload(workdir, compact=False, n_files=n_files,
+                           setattrs=args.setattrs)
+        compacted = run_workload(workdir, compact=True, n_files=n_files,
+                                 setattrs=args.setattrs)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    ratio = raw["history_records"] / max(1, compacted["history_records"])
+    speedup = raw["bootstrap_s"] / max(compacted["bootstrap_s"], 1e-9)
+    payload = {
+        "bench": "history", "smoke": bool(args.smoke),
+        "workload": {"files": n_files, "setattrs_per_file": args.setattrs,
+                     "unlink_pct": 80, "heartbeat_every": 10},
+        "raw": raw, "compacted": compacted,
+        "compaction_ratio": round(ratio, 2),
+        "bootstrap_speedup": round(speedup, 2),
+    }
+    out = os.path.join(os.path.dirname(__file__), "..",
+                       "BENCH_history.json")
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    print(json.dumps(payload, indent=2))
+    if ratio < SMOKE_MIN_RATIO:
+        print(f"FAIL: compaction ratio {ratio:.2f}x < {SMOKE_MIN_RATIO}x",
+              file=sys.stderr)
+        return 1
+    print(f"compaction {ratio:.1f}x, bootstrap-from-history "
+          f"{speedup:.1f}x faster than full-journal replay")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

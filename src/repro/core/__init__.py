@@ -13,6 +13,7 @@ from .cluster import (LcapCluster, LcapClusterService, LocalShard,
                       RemoteShard, fid_slot)
 from .errors import (ClusterError, SessionError, SubscriptionError,
                      UnknownConsumerError, UnknownProducerError)
+from .history import Compactor, HistoryStore, JournalReplayReader
 from .llog import Llog
 from .modules import (CancelCompensating, CoalesceHeartbeats,
                       ReorderByTarget, TypeFilter)
@@ -25,6 +26,7 @@ from .session import (ClusterSession, FanInStream, Session, Stream,
 
 __all__ = [
     "records", "RecordBatch", "AckTracker", "Llog", "LcapProxy",
+    "HistoryStore", "Compactor", "JournalReplayReader",
     "LcapService", "PERSISTENT", "EPHEMERAL",
     "LcapCluster", "LcapClusterService", "LocalShard", "RemoteShard",
     "fid_slot",

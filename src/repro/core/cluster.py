@@ -48,8 +48,9 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from . import records as R
 from .errors import ClusterError
+from .history import JournalReplayReader
 from .llog import Llog
-from .proxy import LcapProxy
+from .proxy import LcapProxy, PushSource
 from .transport import RpcClient
 
 DEFAULT_SLOTS = 64
@@ -72,6 +73,44 @@ def fid_slot(key: Tuple[int, int, int], n_slots: int = DEFAULT_SLOTS) -> int:
     return (z ^ (z >> 31)) % n_slots
 
 
+class ClusterReplayReader:
+    """Shard-filtered replay source over a cluster journal's history
+    tier: reads the journal's compacted history + retained records
+    (``JournalReplayReader``) and keeps only the rows whose target FID
+    currently routes to this shard, so a replay-bootstrap subscription
+    fanned in from every shard covers the stream exactly once.  Slot
+    ownership is read at call time: a consumer bootstrapping *after* a
+    failover sees the dead shard's history from the slots' new owners,
+    and a bootstrap *interrupted* by a failover is rewound to its start
+    on the survivors (``kill_shard`` → ``rewind_active_replays``) so
+    re-routed slots are not skipped — redelivery, not loss.  The
+    residual window mirrors the live path's cascading-failure caveat:
+    a shard whose bootstrap already finished cannot be rewound (the
+    client stopped polling ``fetch_replay``), so a failover in that
+    window loses the dead shard's *unreplayed* share for that consumer.
+    """
+
+    def __init__(self, cluster: "LcapCluster", pid: str, shard_index: int):
+        self.cluster = cluster
+        self.pid = pid
+        self.shard_index = shard_index
+        self._reader = JournalReplayReader(cluster.journals[pid])
+
+    def available_lo(self) -> int:
+        return self._reader.available_lo()
+
+    def read(self, start: int, max_records: int = 1024):
+        batch, nxt = self._reader.read(start, max_records)
+        if len(batch):
+            owner = self.cluster.slot_owner
+            n_slots = self.cluster.n_slots
+            rows = [i for i, key in enumerate(batch.keys())
+                    if owner[fid_slot(key, n_slots)] == self.shard_index]
+            if len(rows) != len(batch):
+                batch = batch.select(rows)
+        return batch, nxt
+
+
 # ---------------------------------------------------------------------------
 # Shard handles: one protocol, two deployments.
 # ---------------------------------------------------------------------------
@@ -84,6 +123,14 @@ class LocalShard:
 
     def add_source(self, pid: str, first: int = 1) -> None:
         self.proxy.add_source(pid, first)
+
+    def set_replay_reader(self, pid: str, reader) -> None:
+        src = self.proxy.producers.get(pid)
+        if isinstance(src, PushSource):
+            src.history_reader = reader
+
+    def rewind_replays(self) -> None:
+        self.proxy.rewind_active_replays()
 
     def offer_many(self, offers: Sequence[Tuple[str, R.RecordBatch, int]],
                    ) -> Dict[str, int]:
@@ -132,6 +179,15 @@ class RemoteShard:
 
     def add_source(self, pid: str, first: int = 1) -> None:
         self._call({"op": "add_source", "pid": pid, "first": first})
+
+    def set_replay_reader(self, pid: str, reader) -> None:
+        # a detached daemon cannot call back into the coordinator's
+        # journals; replay-bootstrap subscriptions are served by
+        # in-process shards (LcapCluster / LcapClusterService)
+        pass
+
+    def rewind_replays(self) -> None:
+        pass                              # no replay support (see above)
 
     def offer_many(self, offers: Sequence[Tuple[str, R.RecordBatch, int]],
                    ) -> Dict[str, int]:
@@ -245,6 +301,8 @@ class LcapCluster:
             for i, shard in enumerate(self.shards):
                 if self.alive[i]:
                     self._shard_call(i, shard.add_source, pid, start)
+                    self._shard_call(i, shard.set_replay_reader, pid,
+                                     ClusterReplayReader(self, pid, i))
                 self.shard_acked[i].setdefault(pid, start - 1)
 
     # -------------------------------------------------------------- routing
@@ -372,6 +430,12 @@ class LcapCluster:
             rr = itertools.cycle(survivors)
             for s in moved:
                 self.slot_owner[s] = next(rr)
+            # a bootstrap in progress on a survivor has already scanned
+            # indices whose slots just moved here and filtered them out;
+            # restart those replays from their start (at-least-once
+            # through failover — the reducers re-apply a prefix)
+            for i in survivors:
+                self._shard_call(i, self.shards[i].rewind_replays)
             redelivered = 0
             for pid, log in self.journals.items():
                 lo = max(log.first_index,

@@ -26,6 +26,12 @@ On-disk layout (when ``path`` is given): one file per segment,
 ``<path>.seg.<first-index>``, each a sequence of ``u32 length + packed
 record``; reader positions live in the ``<path>.readers`` sidecar.  A
 truncated final record (crash mid-append) is dropped on load.
+
+With a ``history`` store attached (history.py), trimming *archives*
+fully acknowledged segments instead of destroying them: the segment
+file is adopted by the store with one rename (same framing), so a late
+consumer can still bootstrap from compacted history while the live
+journal stays aggressively trimmed.
 """
 
 from __future__ import annotations
@@ -79,11 +85,16 @@ class _Segment:
 class Llog:
     def __init__(self, producer_id: str, path: Optional[str] = None,
                  mask: Optional[Iterable[int]] = None,
-                 segment_records: int = DEFAULT_SEGMENT_RECORDS):
+                 segment_records: int = DEFAULT_SEGMENT_RECORDS,
+                 history=None):
         self.producer_id = producer_id
         self.path = path
         self.mask = set(mask) if mask is not None else None  # None = all
         self.segment_records = max(1, segment_records)
+        if history is True:                 # convenience: co-located store
+            from .history import HistoryStore
+            history = HistoryStore(path + ".hist" if path else None)
+        self.history = history
         self._segments: List[_Segment] = []
         self._firsts: List[int] = []      # seg.first per segment (for bisect)
         self._first = 1                   # logical trim point (first live)
@@ -326,27 +337,40 @@ class Llog:
         with self._lock:
             if start < self._first:
                 start = self._first
-            views: List[R.RecordBatch] = []
-            want = max_records
-            # first segment that may hold ``start``: the last one whose
-            # first index is <= start — O(log n) with thousands of
-            # sealed segments instead of a whole-list scan
-            pos = bisect.bisect_right(self._firsts, start) - 1
-            for seg in self._segments[max(0, pos):]:
-                if want <= 0:
-                    break
-                if seg.last < start or not len(seg):
-                    continue
-                lo = max(0, start - seg.first)
-                take = min(want, len(seg) - lo)
-                if take > 0:
-                    views.append(seg.batch(lo, take))
-                    want -= take
-            if not views:
-                return R.RecordBatch.empty()
-            if len(views) == 1:
-                return views[0]
-            return R.RecordBatch.concat(views)
+            return self._read_locked(start, max_records)
+
+    def read_raw(self, start: int, max_records: int = 1024) -> R.RecordBatch:
+        """Like ``read`` but without clamping ``start`` to the logical
+        trim point: records logically trimmed but still physically
+        present (their segment not yet fully acknowledged and dropped)
+        are served.  Replay-bootstrap readers use this for the span
+        between compacted history and the live trim point, keeping the
+        history+journal union gapless."""
+        with self._lock:
+            return self._read_locked(start, max_records)
+
+    def _read_locked(self, start: int, max_records: int) -> R.RecordBatch:
+        views: List[R.RecordBatch] = []
+        want = max_records
+        # first segment that may hold ``start``: the last one whose
+        # first index is <= start — O(log n) with thousands of
+        # sealed segments instead of a whole-list scan
+        pos = bisect.bisect_right(self._firsts, start) - 1
+        for seg in self._segments[max(0, pos):]:
+            if want <= 0:
+                break
+            if seg.last < start or not len(seg):
+                continue
+            lo = max(0, start - seg.first)
+            take = min(want, len(seg) - lo)
+            if take > 0:
+                views.append(seg.batch(lo, take))
+                want -= take
+        if not views:
+            return R.RecordBatch.empty()
+        if len(views) == 1:
+            return views[0]
+        return R.RecordBatch.concat(views)
 
     def ack(self, rid: str, index: int) -> None:
         """Acknowledge (clear) records up to ``index`` for reader ``rid``;
@@ -369,14 +393,21 @@ class Llog:
             return
         self._first = horizon + 1
         # drop whole segments below the logical trim point — O(1) per
-        # segment, never a journal rewrite
+        # segment, never a journal rewrite.  With a history store the
+        # drop is an *archive*: the store adopts the segment file by
+        # rename (same framing) before the journal forgets it.
         while self._segments and self._segments[0].last < self._first:
             seg = self._segments.pop(0)
             self._firsts.pop(0)
             if len(self._segments) == 0 and self._fh is not None:
                 self._fh.close()
                 self._fh = None
-            if seg.path and os.path.exists(seg.path):
+            adopted = False
+            if self.history is not None and len(seg):
+                adopted = self.history.archive(seg.batch(0, len(seg)),
+                                               seg.first, seg.last,
+                                               move_from=seg.path)
+            if not adopted and seg.path and os.path.exists(seg.path):
                 os.remove(seg.path)
             self.stats["segments_dropped"] += 1
 

@@ -65,6 +65,7 @@ from . import records as R
 from .ack import AckTracker
 from .errors import (SubscriptionError, UnknownConsumerError,
                      UnknownProducerError)
+from .history import JournalReplayReader
 from .llog import Llog
 
 Module = Callable[[R.RecordBatch], R.RecordBatch]
@@ -82,13 +83,18 @@ class PushSource:
     Reads return nothing, and upstream acks are recorded here for the
     coordinator to collect (the shard's per-journal watermark)."""
 
-    __slots__ = ("producer_id", "first_index", "last_index", "acked")
+    __slots__ = ("producer_id", "first_index", "last_index", "acked",
+                 "history_reader")
 
     def __init__(self, pid: str, first: int = 1):
         self.producer_id = pid
         self.first_index = first
         self.last_index = first - 1      # highest offered index
         self.acked = first - 1           # this shard's upstream watermark
+        # replay source for push-fed shards: the cluster coordinator
+        # installs a journal-backed, slot-filtered reader here so a
+        # replay-bootstrap consumer on this shard can stream history
+        self.history_reader = None
 
     def has_reader(self, rid: str) -> bool:
         return False
@@ -123,6 +129,12 @@ class Consumer:
         self.acked_hi: Dict[str, int] = {}   # pid -> highest acked index
         self.alive = True
         self.delivered = 0
+        # replay-bootstrap state: while any pid is listed here the
+        # consumer streams history (fetch_replay); live fetches wait
+        self.replay_src: Dict[str, object] = {}   # pid -> replay reader
+        self.replay_pos: Dict[str, int] = {}      # pid -> next index
+        self.replay_hw: Dict[str, int] = {}       # pid -> handoff watermark
+        self.replay_lo: Dict[str, int] = {}       # pid -> bootstrap start
 
     @property
     def load(self) -> int:
@@ -183,7 +195,8 @@ class LcapProxy:
                       "redelivered": 0, "acked_upstream": 0,
                       "ephemeral_drops": 0, "batches_ingested": 0,
                       "filtered_out": 0, "parked": 0, "resumed": 0,
-                      "resume_replayed": 0, "parks_expired": 0}
+                      "resume_replayed": 0, "parks_expired": 0,
+                      "replayed": 0}
 
     def _register_producer(self, pid: str, log: Llog) -> None:
         """Register with ``log`` as the lcap reader and position the
@@ -272,7 +285,8 @@ class LcapProxy:
                mode: str = PERSISTENT, cid: Optional[str] = None,
                types: Optional[Iterable[int]] = None,
                name: Optional[str] = None,
-               resume: Optional[bool] = None) -> Dict:
+               resume: Optional[bool] = None,
+               replay: Optional[object] = None) -> Dict:
         """Register a consumer and return ``{"cid", "resumed", "token"}``.
 
         Persistent consumers name a group and share its stream; ephemeral
@@ -290,12 +304,31 @@ class LcapProxy:
         unless new ones are passed (``resume=True`` demands that state
         exists, ``resume=False`` forbids using it).  The returned
         ``token`` maps producer -> highest acked index.
+
+        ``replay`` bootstraps the consumer from the compacted history
+        tier: ``True`` replays from the beginning, an integer from that
+        journal index.  History batches are streamed first (via
+        ``fetch_replay``); the live stream takes over at a per-producer
+        handoff watermark recorded at attach time — no gap, no
+        duplicate.  Replay requires every producer to have a replayable
+        history source and, for persistent mode, a *fresh* group (a
+        group with existing delivery state already consumed part of the
+        stream and would double-apply it).
         """
         with self._lock:
             self._expire_parked_locked()
             if resume and not name:
                 raise SubscriptionError("resume requires a durable "
                                         "consumer name")
+            if replay not in (None, False):
+                if resume:
+                    raise SubscriptionError("replay cannot be combined "
+                                            "with resume: a resumed durable "
+                                            "consumer already has a cursor")
+                if mode == PERSISTENT and group in self.groups:
+                    raise SubscriptionError(
+                        f"replay-bootstrap requires a fresh group "
+                        f"({group!r} already has delivery state)")
             cid = cid or f"c{next(self._cid_seq)}"
             if cid in self.consumers:
                 raise SubscriptionError(f"consumer {cid} exists")
@@ -338,9 +371,19 @@ class LcapProxy:
                     for pid, log in self.producers.items()}
             else:
                 raise SubscriptionError(f"unknown mode {mode}")
+            if replay not in (None, False):
+                try:
+                    self._arm_replay_locked(cons, replay)
+                except Exception:
+                    # the group was fresh (checked above): undo its
+                    # creation so a failed replay attach leaves no state
+                    if cons.mode == PERSISTENT:
+                        self.groups.pop(cons.group, None)
+                    raise
             self.consumers[cid] = cons
             return {"cid": cid, "resumed": False, "flags": cons.flags,
-                    "token": dict(cons.acked_hi)}
+                    "token": dict(cons.acked_hi),
+                    "replay": bool(cons.replay_pos)}
 
     def _join_group(self, grp: Group, cons: Consumer) -> None:
         grp.members[cons.cid] = cons
@@ -367,6 +410,11 @@ class LcapProxy:
                         types=old.types if types is None else types,
                         name=name)
         cons.acked_hi = old.acked_hi
+        # an interrupted replay bootstrap continues where it stopped
+        cons.replay_src = old.replay_src
+        cons.replay_pos = old.replay_pos
+        cons.replay_hw = old.replay_hw
+        cons.replay_lo = old.replay_lo
         # exact cursor resume: everything the old incarnation had not
         # acked is replayed to the resuming consumer alone — the group
         # never sees a redelivery storm.  Records an explicitly
@@ -386,7 +434,8 @@ class LcapProxy:
         self.consumers[cid] = cons
         self._flush_upstream_locked()       # narrowing may ack in place
         return {"cid": cid, "resumed": True, "flags": cons.flags,
-                "token": dict(cons.acked_hi)}
+                "token": dict(cons.acked_hi),
+                "replay": bool(cons.replay_pos)}
 
     def unsubscribe(self, cid: str, failed: bool = False) -> None:
         """Remove a consumer for good (durable state included).  Its
@@ -708,11 +757,136 @@ class LcapProxy:
                 self._flush_upstream_locked()
             return a + b
 
+    # ------------------------------------------------------------- replay
+    def _replay_reader(self, src):
+        """The replay source of a producer: journals read their own
+        history tier + retained records; push-fed sources use whatever
+        reader the cluster coordinator installed."""
+        if isinstance(src, PushSource):
+            return src.history_reader
+        if isinstance(src, Llog):
+            return JournalReplayReader(src)
+        return getattr(src, "history_reader", None)
+
+    def _arm_replay_locked(self, cons: Consumer, replay) -> None:
+        """Record, per producer, the replay range ``[start, hw]`` where
+        ``hw`` is the handoff watermark: the highest index the live
+        stream will *not* deliver to this consumer.  For a fresh
+        persistent group that is everything already dispatched (the
+        buffered backlog and all later ingests arrive live); for an
+        ephemeral consumer it is the §IV-B connection point."""
+        start = 1 if replay is True else int(replay)
+        if start < 1:
+            raise SubscriptionError(f"replay index must be >= 1 ({start})")
+        buf_lo: Dict[str, int] = {}
+        for pid, batch in self._buffer:
+            if len(batch):
+                lo = min(batch.indices())
+                if lo < buf_lo.get(pid, lo + 1):
+                    buf_lo[pid] = lo
+        for pid, src in self.producers.items():
+            reader = self._replay_reader(src)
+            if reader is None:
+                raise SubscriptionError(
+                    f"producer {pid!r} has no replayable history "
+                    f"(attach a HistoryStore, or subscribe without replay)")
+            lo = reader.available_lo()
+            if start < lo:
+                raise SubscriptionError(
+                    f"history of {pid!r} starts at index {lo}; cannot "
+                    f"replay from {start}")
+            if cons.mode == EPHEMERAL:
+                hw = cons.since.get(pid, 0)  # type: ignore[attr-defined]
+            elif pid in buf_lo:
+                hw = buf_lo[pid] - 1
+            else:
+                hw = self.ingested.get(pid, 0)
+            if hw >= start:
+                cons.replay_src[pid] = reader
+                cons.replay_pos[pid] = start
+                cons.replay_hw[pid] = hw
+                cons.replay_lo[pid] = start
+
+    def fetch_replay(self, cid: str, max_records: int = 1024,
+                     ) -> Tuple[List[Tuple[str, R.RecordBatch]], bool]:
+        """Stream the next slice of the consumer's replay bootstrap as
+        ``(batches, done)``.  Batches carry compacted history (sparse
+        indices) up to each producer's handoff watermark, filtered and
+        remapped exactly like live dispatch; once ``done`` the live
+        stream continues at watermark + 1 with no gap and no
+        duplicate."""
+        with self._lock:
+            cons = self._consumer(cid)
+            out: List[Tuple[str, R.RecordBatch]] = []
+            taken = 0
+            for pid in sorted(cons.replay_pos):
+                if taken >= max_records:
+                    break
+                reader = cons.replay_src[pid]
+                hw = cons.replay_hw[pid]
+                pos = cons.replay_pos[pid]
+                while pos <= hw and taken < max_records:
+                    batch, nxt = reader.read(
+                        pos, min(self.batch_size, max_records - taken))
+                    nxt = max(nxt, pos + 1)          # always advance
+                    rows = [i for i in range(len(batch))
+                            if pos <= batch.packed_index(i) <= hw]
+                    if len(rows) != len(batch):
+                        batch = batch.select(rows)
+                    # same pre-processing as ingest (_admit_locked): a
+                    # replay consumer must see the stream the modules
+                    # produce, not the raw archive, or its state
+                    # diverges from every live consumer's
+                    for mod in self.modules:
+                        batch = mod(batch)
+                    if not isinstance(batch, R.RecordBatch):
+                        batch = R.RecordBatch.from_records(batch)
+                    rows = [i for i in range(len(batch))
+                            if cons.wants(batch.packed_type(i))]
+                    if len(rows) != len(batch):
+                        batch = batch.select(rows)
+                    if len(batch):
+                        out.append((pid, batch.remap(cons.flags)))
+                        taken += len(batch)
+                    pos = min(nxt, hw + 1)
+                cons.replay_pos[pid] = pos
+                if pos > hw:
+                    del cons.replay_pos[pid]
+                    del cons.replay_src[pid]
+                    del cons.replay_hw[pid]
+            self.stats["replayed"] += taken
+            return out, not cons.replay_pos
+
+    def rewind_active_replays(self) -> int:
+        """Restart every unfinished replay bootstrap from its original
+        start index.  A cluster coordinator calls this on the surviving
+        shards after a failover: re-routed slots now pass this shard's
+        slot filter, and indices the bootstrap already scanned while
+        the dead shard owned them would otherwise never be revisited.
+        Re-replaying a prefix redelivers records (at-least-once during
+        failover, exactly like the live path's backlog re-offer); a
+        bootstrap that already *finished* cannot be rewound — the
+        client stopped polling ``fetch_replay`` — which is the
+        documented residual window of the cluster's cascading-failure
+        caveat.  Returns the number of consumers rewound."""
+        with self._lock:
+            n = 0
+            parked = (c for g in self.groups.values()
+                      for c, _dl in g.parked.values())
+            for cons in (*self.consumers.values(), *parked):
+                if cons.replay_pos:
+                    for pid in cons.replay_pos:
+                        cons.replay_pos[pid] = cons.replay_lo[pid]
+                    n += 1
+            return n
+
     # -------------------------------------------------------------- fetch
     def fetch(self, cid: str,
               max_records: int = 256) -> List[Tuple[str, int, bytes]]:
         with self._lock:
             cons = self._consumer(cid)
+            if cons.replay_pos:
+                return []     # bootstrap first: drain fetch_replay
             out = []
             while cons.outbox and len(out) < max_records:
                 out.append(cons.outbox.popleft())
@@ -722,9 +896,14 @@ class LcapProxy:
                       ) -> List[Tuple[str, R.RecordBatch]]:
         """Drain up to ``max_records`` from the consumer's outbox as
         per-producer ``RecordBatch``es (consecutive same-producer runs
-        stay one batch — the unit that goes on the wire)."""
+        stay one batch — the unit that goes on the wire).  A consumer
+        with an unfinished replay bootstrap gets nothing here until
+        ``fetch_replay`` reports done — history strictly precedes the
+        live stream."""
         with self._lock:
             cons = self._consumer(cid)
+            if cons.replay_pos:
+                return []
             runs: List[Tuple[str, List[bytes]]] = []
             taken = 0
             while cons.outbox and taken < max_records:

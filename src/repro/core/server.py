@@ -9,6 +9,9 @@ producers as soon as possible) and the TCP request/response service the
                 transparently resumes a parked durable consumer
     resume      like subscribe, but demands parked durable state
     fetch       drain queued records as per-producer batch frames
+    fetch_replay  stream the compacted-history bootstrap of a replay
+                subscription (history first, then fetch takes over at
+                the handoff watermark)
     commit      acknowledge batches of records across producers
     detach      drop the connection but keep the durable identity
     close       deregister for good
@@ -65,7 +68,8 @@ class LcapService:
                     msg.get("group"), flags=msg.get("flags"),
                     mode=msg.get("mode", "persistent"),
                     types=msg.get("types"), name=msg.get("name"),
-                    resume=True if op == "resume" else msg.get("resume"))
+                    resume=True if op == "resume" else msg.get("resume"),
+                    replay=msg.get("replay"))
                 session.setdefault("cids", set()).add(info["cid"])
                 if self.shard_index is not None:   # cluster-aware reply
                     info = {**info, "shard": self.shard_index,
@@ -97,6 +101,12 @@ class LcapService:
                                                    msg.get("max", 256))
                 return {"batches": [(pid, batch.to_wire())
                                     for pid, batch in batches]}
+            if op == "fetch_replay":
+                batches, done = self.proxy.fetch_replay(msg["cid"],
+                                                        msg.get("max", 256))
+                return {"batches": [(pid, batch.to_wire())
+                                    for pid, batch in batches],
+                        "done": done}
             if op == "commit":
                 self.proxy.commit(msg["cid"], msg["acks"])
                 return {"ok": True}

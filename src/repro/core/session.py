@@ -60,6 +60,11 @@ class Subscription:
     types        CL_* op-type mask; None = every operation
     auto_commit  iterate-commits-previous-batch (True) vs explicit commit()
     max_records  fetch granularity (records per fetch round)
+    replay       bootstrap from the compacted history tier: True = from
+                 the beginning, an int = from that journal index.  The
+                 stream yields history batches first, then hands off to
+                 the live stream at a recorded watermark (no gap, no
+                 duplicate).  Requires a fresh group for persistent mode.
     """
 
     group: Optional[str] = None
@@ -69,6 +74,7 @@ class Subscription:
     types: Optional[frozenset] = None
     auto_commit: bool = True
     max_records: int = 1024
+    replay: Optional[Union[bool, int]] = None
 
     def __post_init__(self):
         if self.types is not None and not isinstance(self.types, frozenset):
@@ -93,11 +99,16 @@ class _LocalBackend:
                resume: Optional[bool] = None) -> Dict:
         return self.proxy.attach(spec.group, flags=spec.flags,
                                  mode=spec.mode, types=spec.types,
-                                 name=spec.name, resume=resume)
+                                 name=spec.name, resume=resume,
+                                 replay=spec.replay)
 
     def fetch(self, cid: str, max_records: int,
               ) -> List[Tuple[str, R.RecordBatch]]:
         return self.proxy.fetch_batches(cid, max_records)
+
+    def fetch_replay(self, cid: str, max_records: int,
+                     ) -> Tuple[List[Tuple[str, R.RecordBatch]], bool]:
+        return self.proxy.fetch_replay(cid, max_records)
 
     def commit(self, cid: str, acks: Dict[str, List[int]]) -> None:
         self.proxy.commit(cid, acks)
@@ -132,18 +143,26 @@ class _WireBackend:
         reply = self._call({
             "op": "resume" if resume else "subscribe",
             "group": spec.group, "name": spec.name, "mode": spec.mode,
-            "flags": spec.flags, "resume": resume,
+            "flags": spec.flags, "resume": resume, "replay": spec.replay,
             "types": sorted(spec.types) if spec.types is not None else None,
         })
         return {"cid": reply["cid"], "resumed": reply.get("resumed", False),
                 "flags": reply.get("flags"),
-                "token": reply.get("token") or {}}
+                "token": reply.get("token") or {},
+                "replay": reply.get("replay", False)}
 
     def fetch(self, cid: str, max_records: int,
               ) -> List[Tuple[str, R.RecordBatch]]:
         reply = self._call({"op": "fetch", "cid": cid, "max": max_records})
         return [(pid, R.RecordBatch.from_wire(blob))
                 for pid, blob in reply["batches"]]
+
+    def fetch_replay(self, cid: str, max_records: int,
+                     ) -> Tuple[List[Tuple[str, R.RecordBatch]], bool]:
+        reply = self._call({"op": "fetch_replay", "cid": cid,
+                            "max": max_records})
+        return ([(pid, R.RecordBatch.from_wire(blob))
+                 for pid, blob in reply["batches"]], reply["done"])
 
     def commit(self, cid: str, acks: Dict[str, List[int]]) -> None:
         self._call({"op": "commit", "cid": cid,
@@ -188,8 +207,13 @@ class Stream:
         self.resume_token: Dict[str, int] = dict(info["token"])
         #: producer -> highest index delivered to the application
         self.cursors: Dict[str, int] = {}
+        #: records delivered from the compacted history tier
+        self.replayed = 0
+        self._replaying: bool = bool(info.get("replay"))
         self._uncommitted: Dict[str, List[int]] = {}
-        self._queue: Deque[Tuple[str, R.RecordBatch]] = deque()
+        # (producer, batch, from_replay) — replayed batches are already
+        # acknowledged upstream and are never commit-pending
+        self._queue: Deque[Tuple[str, R.RecordBatch, bool]] = deque()
         # the proxy reports the *effective* projection (a resumed
         # consumer may have inherited a narrower parked mask); the
         # local remap must match it, not the spec's default
@@ -203,27 +227,60 @@ class Stream:
         # local remap: zero-fill requested-but-absent fields (§IV-A)
         return batch.remap(self._flags)
 
-    def _note(self, pid: str, batch: R.RecordBatch) -> None:
+    def _note(self, pid: str, batch: R.RecordBatch,
+              track: bool = True) -> None:
         indices = batch.indices()
         if indices:
             # max, not last: a proxy module may reorder within a batch
             self.cursors[pid] = max(self.cursors.get(pid, 0), max(indices))
-            if self.spec.mode != EPHEMERAL:
+            if track and self.spec.mode != EPHEMERAL:
                 self._uncommitted.setdefault(pid, []).extend(indices)
+
+    @property
+    def replaying(self) -> bool:
+        """True while the history bootstrap is still streaming."""
+        return self._replaying
+
+    def _fetch_replay_round(self, cap: int,
+                            ) -> List[Tuple[str, R.RecordBatch, bool]]:
+        """One replay round: returns queued-entry triples; flips
+        ``_replaying`` off when the proxy reports the bootstrap done."""
+        out: List[Tuple[str, R.RecordBatch, bool]] = []
+        while self._replaying and not out:
+            batches, done = self.session._backend.fetch_replay(self.cid, cap)
+            if done:
+                self._replaying = False
+            if not batches and not done:
+                break                        # defensive: never spin
+            for pid, batch in batches:
+                out.append((pid, self._remap(batch), True))
+        return out
 
     def fetch(self, max_records: Optional[int] = None,
               ) -> List[Tuple[str, R.RecordBatch]]:
         """Explicitly drain up to ``max_records`` queued records; every
-        returned batch becomes commit-pending.  Locally requeued batches
+        returned *live* batch becomes commit-pending (replayed history
+        is already acknowledged upstream).  Locally requeued batches
         (see ``requeue``) are returned first."""
         cap = max_records or self.spec.max_records
         out, taken = [], 0
         while self._queue and taken < cap:
-            pid, batch = self._queue.popleft()
-            self._note(pid, batch)
+            pid, batch, from_replay = self._queue.popleft()
+            self._note(pid, batch, track=not from_replay)
+            if from_replay:
+                self.replayed += len(batch)
             out.append((pid, batch))
             taken += len(batch)
-        if taken < cap:
+        while self._replaying and taken < cap:
+            round_ = self._fetch_replay_round(cap - taken)
+            if not round_:
+                break
+            for pid, batch, _ in round_:
+                self._note(pid, batch, track=False)
+                self.replayed += len(batch)
+                out.append((pid, batch))
+                taken += len(batch)
+        if taken < cap and not self._replaying:
             for pid, batch in self.session._backend.fetch(self.cid,
                                                           cap - taken):
                 batch = self._remap(batch)
@@ -238,13 +295,19 @@ class Stream:
         if not self._queue:
             if self.spec.auto_commit:
                 self.commit()
-            for pid, batch in self.session._backend.fetch(
-                    self.cid, self.spec.max_records):
-                self._queue.append((pid, self._remap(batch)))
+            if self._replaying:
+                self._queue.extend(
+                    self._fetch_replay_round(self.spec.max_records))
+            if not self._queue and not self._replaying:
+                for pid, batch in self.session._backend.fetch(
+                        self.cid, self.spec.max_records):
+                    self._queue.append((pid, self._remap(batch), False))
             if not self._queue:
                 raise StopIteration
-        pid, batch = self._queue.popleft()
-        self._note(pid, batch)
+        pid, batch, from_replay = self._queue.popleft()
+        self._note(pid, batch, track=not from_replay)
+        if from_replay:
+            self.replayed += len(batch)
         return pid, batch
 
     def records(self) -> Iterator[Tuple[str, R.ChangelogRecord]]:
@@ -272,7 +335,9 @@ class Stream:
                 self._uncommitted[pid] = left
             else:
                 self._uncommitted.pop(pid, None)
-            self._queue.appendleft((pid, batch))
+            # requeued batches re-enter as live; committing a replayed
+            # index the group never delivered is a no-op upstream
+            self._queue.appendleft((pid, batch, False))
 
     def commit(self) -> int:
         """Acknowledge every delivered-but-uncommitted record in one
@@ -390,6 +455,16 @@ class FanInStream:
     @property
     def pending_commit(self) -> int:
         return sum(s.pending_commit for _, s in self._children)
+
+    @property
+    def replaying(self) -> bool:
+        """True while any shard's history bootstrap is still
+        streaming."""
+        return any(s.replaying for _, s in self._children)
+
+    @property
+    def replayed(self) -> int:
+        return sum(s.replayed for _, s in self._children)
 
     # -- failure handling ----------------------------------------------------
     def _drop(self, pair: Tuple[int, Stream]) -> None:

@@ -21,6 +21,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# the pinned JAX names this TPUCompilerParams; newer releases renamed it
+# to CompilerParams — accept either
+_CompilerParams = getattr(pltpu, "TPUCompilerParams", None) or \
+    getattr(pltpu, "CompilerParams")
+
 NEG_INF = -1e30
 
 
@@ -115,7 +120,7 @@ def flash_attention_bhsd(q, k, v, *, causal=True, window=0, cap=0.0,
             pltpu.VMEM((block_q, 1), jnp.float32),   # running max
             pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

@@ -130,8 +130,11 @@ class MetricsDB(_GroupWorker):
     def query(self, sql: str, args=()) -> List[tuple]:
         return list(self.conn.execute(sql, args))
 
-    def close(self) -> None:
-        super().close()
+    def close(self, failed: bool = False) -> None:
+        # keep the base signature: a crashed worker is closed with
+        # failed=True so its durable cursor parks instead of
+        # deregistering (resume picks up exactly at the ack cursor)
+        super().close(failed=failed)
         self.conn.close()
 
 
@@ -271,16 +274,13 @@ class CacheInvalidator(_GroupWorker):
         self.cache = cache
         self.invalidated = 0
 
-    def poll(self, max_records: int = 256) -> int:
-        n = 0
-        for pid, batch in self.stream.fetch(max_records):
-            for i in range(len(batch)):
-                # type + tfid straight from the packed header — an
-                # invalidator never needs the record body
-                if batch.packed_type(i) == R.CL_EVICT:
-                    _, oid, ver = batch.packed_tfid(i)
-                    if self.cache.pop((oid, ver), None) is not None:
-                        self.invalidated += 1
-            n += len(batch)
-        self.stream.commit()               # no-op for the ephemeral mode
-        return n
+    def handle_batch(self, pid: str, batch: R.RecordBatch) -> None:
+        # type + tfid straight from the packed header — an invalidator
+        # never needs the record body.  Delivery goes through the base
+        # poll(), whose requeue-on-failure guard keeps a persistent-mode
+        # invalidator at-least-once when a handler round dies mid-way.
+        for i in range(len(batch)):
+            if batch.packed_type(i) == R.CL_EVICT:
+                _, oid, ver = batch.packed_tfid(i)
+                if self.cache.pop((oid, ver), None) is not None:
+                    self.invalidated += 1

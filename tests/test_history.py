@@ -1,0 +1,596 @@
+"""Compacted history tier + replay-bootstrap subscriptions.
+
+State-preserving compaction (CREATE+UNLINK annihilation, rename-chain
+folding, last-writer-wins thinning), the Llog archive-at-trim hook,
+HistoryStore persistence/crash recovery, and the replay handoff
+contract: a replay-bootstrap consumer reconstructs the exact same
+final state as a from-the-start live consumer, with zero gap and zero
+duplicate at the handoff watermark — single proxy, wire, and sharded
+cluster."""
+
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import records as R
+from repro.core.cluster import LcapCluster, LcapClusterService
+from repro.core.errors import SubscriptionError
+from repro.core.history import Compactor, HistoryStore, JournalReplayReader
+from repro.core.llog import Llog
+from repro.core.proxy import LcapProxy
+from repro.core.server import LcapService
+from repro.core.session import Subscription, connect
+
+
+def rec(t=R.CL_CREATE, oid=1, ver=0, name=b"f", index=0, **kw):
+    return R.ChangelogRecord(type=t, index=index, tfid=R.Fid(1, oid, ver),
+                             pfid=R.Fid(1, 0, 0), name=name, **kw)
+
+
+def batch_of(recs):
+    for i, r in enumerate(recs):
+        if not r.index:
+            r.index = i + 1
+    return R.RecordBatch.from_records(recs)
+
+
+def apply_state(state, r):
+    """The reference reducer both consumers run; compaction must be
+    invisible to it."""
+    t, k = r.type, r.key()
+    if t in (R.CL_CREATE, R.CL_MKDIR, R.CL_MKNOD, R.CL_SOFTLINK):
+        state[k] = {"name": r.name, "attr": None, "hb": None}
+    elif t in (R.CL_UNLINK, R.CL_RMDIR):
+        state.pop(k, None)
+    elif t == R.CL_RENAME:
+        if k in state:
+            state[k]["name"] = r.name
+    elif t == R.CL_SETATTR:
+        if k in state:
+            state[k]["attr"] = r.index
+    elif t == R.CL_HEARTBEAT:
+        state.setdefault(k, {})["hb"] = r.metrics
+
+
+def drain_state(stream, state, rounds=400, done=None):
+    """Fetch until the stream is dry (and any replay finished)."""
+    for _ in range(rounds):
+        pairs = stream.fetch(4096)
+        for _pid, b in pairs:
+            for i in range(len(b)):
+                apply_state(state, b.record(i))
+        stream.commit()
+        if not pairs and not stream.replaying and (done is None or done()):
+            return
+    raise AssertionError("stream did not drain")
+
+
+# ------------------------------------------------------------- compactor
+def test_annihilates_closed_lifetimes():
+    c = Compactor()
+    out = c.compact(batch_of([
+        rec(R.CL_CREATE, oid=1), rec(R.CL_SETATTR, oid=1),
+        rec(R.CL_RENAME, oid=1, name=b"g"), rec(R.CL_UNLINK, oid=1),
+        rec(R.CL_CREATE, oid=2),
+    ]))
+    assert [R.unpack(b).type for b in out] == [R.CL_CREATE]
+    assert R.unpack(out[0]).tfid.oid == 2
+    assert c.stats["annihilated"] == 4
+
+
+def test_unlink_without_observed_create_is_kept():
+    c = Compactor()
+    out = c.compact(batch_of([rec(R.CL_SETATTR, oid=1),
+                              rec(R.CL_UNLINK, oid=1)]))
+    assert [R.unpack(b).type for b in out] == [R.CL_SETATTR, R.CL_UNLINK]
+
+
+def test_hardlinked_lifetime_not_annihilated():
+    c = Compactor()
+    out = c.compact(batch_of([
+        rec(R.CL_CREATE, oid=1), rec(R.CL_HARDLINK, oid=1),
+        rec(R.CL_UNLINK, oid=1),
+    ]))
+    assert len(out) == 3                     # UNLINK removed one name only
+
+
+def test_recreate_after_unlink_survives():
+    c = Compactor()
+    out = c.compact(batch_of([
+        rec(R.CL_CREATE, oid=1), rec(R.CL_UNLINK, oid=1),
+        rec(R.CL_CREATE, oid=1, name=b"again"),
+    ]))
+    parsed = [R.unpack(b) for b in out]
+    assert [p.type for p in parsed] == [R.CL_CREATE]
+    assert parsed[0].name == b"again"
+
+
+def test_rename_chain_folds_to_original_source_final_target():
+    c = Compactor()
+    out = c.compact(batch_of([
+        rec(R.CL_RENAME, oid=1, name=b"b", sfid=R.Fid(9, 9, 9),
+            sname=b"a"),
+        rec(R.CL_RENAME, oid=1, name=b"c", sfid=R.Fid(8, 8, 8),
+            sname=b"b"),
+        rec(R.CL_RENAME, oid=1, name=b"d", sfid=R.Fid(7, 7, 7),
+            sname=b"c"),
+    ]))
+    assert len(out) == 1
+    folded = R.unpack(out[0])
+    assert folded.name == b"d" and folded.sname == b"a"
+    assert folded.sfid == R.Fid(9, 9, 9)     # original source
+    assert folded.index == 3                 # final rename's position
+    assert c.stats["folded"] == 2
+
+
+def test_idempotent_ops_thin_to_last_writer():
+    c = Compactor()
+    out = c.compact(batch_of([
+        rec(R.CL_CREATE, oid=1),
+        rec(R.CL_SETATTR, oid=1), rec(R.CL_SETATTR, oid=1),
+        rec(R.CL_SETATTR, oid=1),
+        rec(R.CL_HEARTBEAT, oid=7, metrics=(0.1,)),
+        rec(R.CL_HEARTBEAT, oid=7, metrics=(0.9,)),
+    ]))
+    parsed = [R.unpack(b) for b in out]
+    assert [p.type for p in parsed] == [R.CL_CREATE, R.CL_SETATTR,
+                                        R.CL_HEARTBEAT]
+    assert parsed[1].index == 4              # the last SETATTR
+    assert parsed[2].metrics == (0.9,)       # the last heartbeat
+    assert c.stats["thinned"] == 3
+
+
+def test_output_stays_in_journal_index_order():
+    c = Compactor()
+    out = c.compact(batch_of([
+        rec(R.CL_CREATE, oid=1), rec(R.CL_CREATE, oid=2),
+        rec(R.CL_SETATTR, oid=1), rec(R.CL_SETATTR, oid=2),
+        rec(R.CL_SETATTR, oid=1),
+    ]))
+    indices = [R.unpack(b).index for b in out]
+    assert indices == sorted(indices) == [1, 2, 4, 5]
+
+
+# ---------------------------------------------------------- history store
+def feed_churn(log, n_files=20, setattrs=3, unlink_every=2):
+    """Create/spam/rename/maybe-unlink — the churn workload."""
+    for i in range(n_files):
+        log.log(rec(R.CL_CREATE, oid=i, name=b"f%d" % i))
+        for _ in range(setattrs):
+            log.log(rec(R.CL_SETATTR, oid=i))
+        log.log(rec(R.CL_RENAME, oid=i, name=b"g%d" % i, sname=b"f%d" % i,
+                    sfid=R.Fid(1, i, 0)))
+        if i % unlink_every == 0:
+            log.log(rec(R.CL_UNLINK, oid=i, name=b"g%d" % i))
+
+
+def test_trim_archives_instead_of_unlinking(tmp_path):
+    log = Llog("mdt0", path=str(tmp_path / "j"), segment_records=8,
+               history=True)
+    rid = log.register_reader()
+    feed_churn(log)
+    total = log.last_index
+    log.ack(rid, total)                       # trims everything
+    assert log.first_index == total + 1
+    hist = log.history
+    assert (hist.covered_lo, hist.covered_hi) == (1, total)
+    assert 0 < hist.record_count < total      # compacted on merge
+    # archived files exist; dropped journal segments are gone
+    assert not [p for p in os.listdir(tmp_path)
+                if ".seg." in p and os.path.getsize(tmp_path / p)]
+
+
+def test_archive_is_idempotent():
+    hist = HistoryStore()
+    b = batch_of([rec(oid=1), rec(oid=2)])
+    assert hist.archive(b, 1, 2)
+    assert not hist.archive(b, 1, 2)          # crash-window replay
+    assert hist.stats["duplicate_skips"] == 1
+    assert hist.record_count == 2
+
+
+def test_read_skips_annihilated_gaps_and_advances():
+    hist = HistoryStore(merge_factor=2)
+    hist.archive(batch_of([rec(R.CL_CREATE, oid=1, index=1),
+                           rec(R.CL_CREATE, oid=2, index=2)]), 1, 2)
+    hist.archive(batch_of([rec(R.CL_SETATTR, oid=1, index=3),
+                           rec(R.CL_UNLINK, oid=1, index=4)]), 3, 4)
+    # merge compacted: oid=1's whole lifetime annihilated
+    assert hist.record_count == 1
+    batch, nxt = hist.read(1, 10)
+    assert [R.unpack(b).index for b in batch] == [2]
+    assert nxt == 5                           # gap 3..4 covered too
+    empty, nxt = hist.read(3, 10)
+    assert len(empty) == 0 and nxt == 5
+
+
+def test_store_reload_and_crash_recovery(tmp_path):
+    base = str(tmp_path / "hist")
+    hist = HistoryStore(base, merge_factor=100)
+    hist.archive(batch_of([rec(oid=1, index=1), rec(oid=2, index=2)]), 1, 2)
+    hist.archive(batch_of([rec(oid=3, index=3), rec(oid=4, index=4)]), 3, 4)
+    files = sorted(os.listdir(tmp_path))
+    assert len(files) == 2
+    # crash mid-merge leaves a stray tmp; crash mid-write leaves a torn
+    # tail record — both must be absorbed on reload (Llog parity)
+    with open(base + ".0.8.tmp", "wb") as fh:
+        fh.write(b"garbage")
+    torn = str(tmp_path / files[-1])
+    with open(torn, "r+b") as fh:
+        fh.truncate(os.path.getsize(torn) - 3)
+    hist2 = HistoryStore(base)
+    assert not [p for p in os.listdir(tmp_path) if p.endswith(".tmp")]
+    assert hist2.stats["torn_dropped"] == 1
+    batch, _ = hist2.read(1, 10)
+    assert [R.unpack(b).index for b in batch] == [1, 2, 3]
+    assert (hist2.covered_lo, hist2.covered_hi) == (1, 4)
+
+
+def test_reload_drops_segments_covered_by_a_merge(tmp_path):
+    base = str(tmp_path / "hist")
+    hist = HistoryStore(base, merge_factor=100)
+    hist.archive(batch_of([rec(oid=1, index=1)]), 1, 1)
+    hist.archive(batch_of([rec(oid=2, index=2)]), 2, 2)
+    saved = {p: (tmp_path / p).read_bytes() for p in os.listdir(tmp_path)}
+    hist.compact_now()                        # writes merged, deletes parts
+    for p, blob in saved.items():             # crash before the deletes
+        (tmp_path / p).write_bytes(blob)
+    assert len(os.listdir(tmp_path)) == 3
+    hist2 = HistoryStore(base)
+    assert hist2.segment_count == 1           # merged segment wins
+    assert len(os.listdir(tmp_path)) == 1     # covered files deleted
+    batch, _ = hist2.read(1, 10)
+    assert [R.unpack(b).index for b in batch] == [1, 2]
+
+
+def test_journal_replay_reader_spans_history_and_live(tmp_path):
+    log = Llog("mdt0", path=str(tmp_path / "j"), segment_records=4,
+               history=True)
+    rid = log.register_reader()
+    for i in range(10):
+        log.log(rec(oid=100 + i))             # unique targets: no drops
+    log.ack(rid, 6)                           # segments [1..4] archived
+    assert log.history.covered_hi == 4
+    reader = JournalReplayReader(log)
+    assert reader.available_lo() == 1
+    got, pos = [], 1
+    while pos <= 10:
+        batch, pos = reader.read(pos, 3)
+        got.extend(batch.indices())
+    assert got == list(range(1, 11))          # gapless across the seam
+
+
+# ------------------------------------------------------- replay: 1 proxy
+def mk_history_proxy(tmp_path, **llog_kw):
+    log = Llog("mdt0", path=str(tmp_path / "j"), segment_records=16,
+               history=True, **llog_kw)
+    proxy = LcapProxy({"mdt0": log})
+    return proxy, log
+
+
+def run_churn_with_live(proxy, log, state_live, n_files=40):
+    live = connect(proxy).subscribe("live")
+    for i in range(n_files):
+        feed_churn(log, n_files=1, setattrs=2)
+        proxy.pump()
+        for _pid, b in live:
+            for x in range(len(b)):
+                apply_state(state_live, b.record(x))
+        live.commit()
+        proxy.flush_upstream()
+    return live
+
+
+def test_replay_bootstrap_matches_live_state(tmp_path):
+    proxy, log = mk_history_proxy(tmp_path)
+    state_live = {}
+    run_churn_with_live(proxy, log, state_live)
+    assert log.first_index > 1                # journal really trimmed
+    boot = connect(proxy).subscribe(Subscription(group="boot", replay=True))
+    state_boot = {}
+    drain_state(boot, state_boot)
+    assert boot.replayed > 0
+    assert state_boot == state_live
+    # compaction made the bootstrap cheaper than the full journal
+    assert boot.replayed < log.last_index
+
+
+def test_replay_from_index(tmp_path):
+    proxy, log = mk_history_proxy(tmp_path)
+    log2_state = {}
+    run_churn_with_live(proxy, log, log2_state, n_files=10)
+    hi = log.last_index
+    boot = connect(proxy).subscribe(Subscription(group="boot",
+                                                 replay=hi - 4))
+    got = []
+    for _ in range(50):
+        for _pid, b in boot.fetch(4096):
+            got.extend(b.indices())
+        if not boot.replaying:
+            break
+    assert got and min(got) >= hi - 4
+
+
+def test_replay_requires_fresh_group_and_no_resume(tmp_path):
+    proxy, log = mk_history_proxy(tmp_path)
+    session = connect(proxy)
+    session.subscribe("taken")
+    with pytest.raises(SubscriptionError):
+        session.subscribe(Subscription(group="taken", replay=True))
+    with pytest.raises(SubscriptionError):
+        proxy.attach("fresh", name="n", resume=True, replay=True)
+
+
+def test_replay_beyond_available_history_is_refused(tmp_path):
+    log = Llog("mdt0", path=str(tmp_path / "j"), segment_records=4)
+    proxy = LcapProxy({"mdt0": log})          # no history store
+    for i in range(10):
+        log.log(rec(oid=i))
+    proxy.pump()
+    s = connect(proxy).subscribe("g")
+    for _pid, b in s:
+        pass
+    s.commit()
+    proxy.flush_upstream()                    # trims; history is gone
+    assert log.first_index > 1
+    with pytest.raises(SubscriptionError):
+        connect(proxy).subscribe(Subscription(group="boot", replay=True))
+    # the untrimmed suffix is still replayable
+    stream = connect(proxy).subscribe(
+        Subscription(group="ok", replay=log.first_index))
+    assert stream is not None
+
+
+def test_replay_handoff_exact_under_concurrent_ingest(tmp_path):
+    """The acceptance-criterion exactness check: with compaction
+    disabled, replayed ∪ live is every index exactly once, split at
+    the handoff watermark, while the producer keeps logging."""
+    log = Llog("mdt0", path=str(tmp_path / "j"), segment_records=16,
+               history=HistoryStore(str(tmp_path / "j.hist"),
+                                    compactor=None))
+    proxy = LcapProxy({"mdt0": log})
+    svc = LcapService(proxy, poll_interval=0.001).start()
+    try:
+        live = connect(svc.address).subscribe("live")
+        for i in range(200):
+            log.log(rec(oid=i))
+        deadline, got = time.time() + 5, 0
+        while got < 200 and time.time() < deadline:
+            for _pid, b in live:
+                got += len(b)
+            live.commit()
+        assert got == 200
+
+        stop = threading.Event()
+
+        def produce():
+            i = 200
+            while not stop.is_set():
+                log.log(rec(oid=i))
+                i += 1
+                time.sleep(0.0003)
+
+        t = threading.Thread(target=produce)
+        t.start()
+        time.sleep(0.02)
+        boot = connect(svc.address).subscribe(
+            Subscription(group="boot", replay=True))
+        replay_idx, live_idx = set(), set()
+        deadline = time.time() + 10
+        while time.time() < deadline:
+            before = boot.replayed
+            pairs = boot.fetch(256)
+            delta = boot.replayed - before    # replay batches come first
+            seen = 0
+            for _pid, b in pairs:
+                for x in range(len(b)):
+                    tgt = replay_idx if seen < delta else live_idx
+                    tgt.add(b.packed_index(x))
+                    seen += 1
+            boot.commit()
+            if not boot.replaying and len(replay_idx | live_idx) >= 260:
+                break
+        stop.set()
+        t.join()
+        for _ in range(80):                   # drain the tail
+            for _pid, b in boot.fetch(4096):
+                for x in range(len(b)):
+                    live_idx.add(b.packed_index(x))
+            boot.commit()
+            for _pid, b in live:
+                pass
+            live.commit()
+        total = log.last_index
+        assert replay_idx and live_idx
+        assert not (replay_idx & live_idx), "duplicate at handoff"
+        assert max(replay_idx) < min(live_idx), "handoff not a watermark"
+        assert (replay_idx | live_idx) == set(range(1, total + 1)), "gap"
+    finally:
+        svc.stop()
+
+
+def test_ephemeral_replay_is_an_audit_scan(tmp_path):
+    proxy, log = mk_history_proxy(tmp_path)
+    state_live = {}
+    run_churn_with_live(proxy, log, state_live, n_files=15)
+    audit = connect(proxy).subscribe(Subscription(mode="ephemeral",
+                                                  replay=True))
+    state = {}
+    drain_state(audit, state)
+    assert state == state_live
+    # ephemeral: the scan never blocked the journal trim
+    assert proxy.upstream_acked["mdt0"] == log.last_index
+
+
+def test_parked_replay_resumes_where_it_stopped(tmp_path):
+    proxy, log = mk_history_proxy(tmp_path)
+    state_live = {}
+    run_churn_with_live(proxy, log, state_live)
+    session = connect(proxy)
+    boot = session.subscribe(Subscription(group="boot", name="b0",
+                                          replay=True, max_records=8))
+    state_boot = {}
+    pairs = boot.fetch(8)                     # a *partial* bootstrap
+    for _pid, b in pairs:
+        for x in range(len(b)):
+            apply_state(state_boot, b.record(x))
+    assert boot.replaying
+    boot.detach()                             # connection lost: parked
+    resumed = session.resume("boot", "b0")
+    assert resumed.replaying                  # bootstrap continues
+    drain_state(resumed, state_boot)
+    assert state_boot == state_live
+
+
+# ------------------------------------------------------ replay: cluster
+def mk_cluster(tmp_path, n_shards=2):
+    logs = {f"mdt{m}": Llog(f"mdt{m}", path=str(tmp_path / f"j{m}"),
+                            segment_records=16, history=True)
+            for m in range(2)}
+    return LcapCluster(logs, n_shards=n_shards), logs
+
+
+def churn_cluster(cluster, logs, live, state_live, n=40):
+    for i in range(n):
+        for m, log in enumerate(logs.values()):
+            log.log(rec(R.CL_CREATE, oid=i * 2 + m, name=b"f%d" % i))
+            log.log(rec(R.CL_SETATTR, oid=i * 2 + m))
+            if i % 3 == 0:
+                log.log(rec(R.CL_UNLINK, oid=i * 2 + m))
+        cluster.pump()
+        for _pid, b in live:
+            for x in range(len(b)):
+                apply_state(state_live, b.record(x))
+        live.commit()
+        cluster.collect_watermarks()
+
+
+def test_cluster_replay_bootstrap_matches_live(tmp_path):
+    cluster, logs = mk_cluster(tmp_path)
+    live = connect(cluster).subscribe("live")
+    state_live = {}
+    churn_cluster(cluster, logs, live, state_live)
+    assert all(log.first_index > 1 for log in logs.values())
+    boot = connect(cluster).subscribe(Subscription(group="boot",
+                                                   replay=True))
+    state_boot = {}
+    drain_state(boot, state_boot)
+    assert boot.replayed > 0
+    assert state_boot == state_live
+
+
+def test_cluster_replay_after_shard_kill_reroute(tmp_path):
+    """Compaction + replay across a failover: the dead shard's slots
+    re-route, and a consumer bootstrapping afterwards reads that
+    history from the surviving owners."""
+    cluster, logs = mk_cluster(tmp_path)
+    live = connect(cluster).subscribe("live")
+    state_live = {}
+    churn_cluster(cluster, logs, live, state_live, n=25)
+    cluster.kill_shard(0)
+    churn_cluster(cluster, logs, live, state_live, n=10)
+    boot = connect(cluster).subscribe(Subscription(group="boot",
+                                                   replay=True))
+    state_boot = {}
+    drain_state(boot, state_boot)
+    assert state_boot == state_live
+    assert cluster.stats["shards_failed"] == 1
+
+
+def test_cluster_service_replay_over_the_wire(tmp_path):
+    cluster, logs = mk_cluster(tmp_path)
+    service = LcapClusterService(cluster, poll_interval=0.001).start()
+    try:
+        live = connect(service).subscribe("live")
+        state_live = {}
+        for i in range(30):
+            for m, log in enumerate(logs.values()):
+                log.log(rec(R.CL_CREATE, oid=i * 2 + m))
+                log.log(rec(R.CL_SETATTR, oid=i * 2 + m))
+                if i % 2 == 0:
+                    log.log(rec(R.CL_UNLINK, oid=i * 2 + m))
+        total = sum(log.last_index for log in logs.values())
+        deadline, seen = time.time() + 10, 0
+        while seen < total and time.time() < deadline:
+            for _pid, b in live:
+                for x in range(len(b)):
+                    apply_state(state_live, b.record(x))
+                    seen += 1
+            live.commit()
+        assert seen == total
+        # let collective acks trim the journals into history
+        deadline = time.time() + 10
+        while time.time() < deadline and \
+                any(log.first_index <= log.last_index for log in
+                    logs.values()):
+            time.sleep(0.005)
+        boot = connect(service).subscribe(Subscription(group="boot",
+                                                       replay=True))
+        state_boot = {}
+        deadline = time.time() + 10
+        while time.time() < deadline:
+            pairs = boot.fetch(4096)
+            for _pid, b in pairs:
+                for x in range(len(b)):
+                    apply_state(state_boot, b.record(x))
+            boot.commit()
+            if not pairs and not boot.replaying and state_boot == state_live:
+                break
+        assert state_boot == state_live
+        assert boot.replayed > 0
+    finally:
+        service.stop()
+
+
+def test_replay_runs_the_stream_modules(tmp_path):
+    """A replay consumer must see the stream the proxy's modules
+    produce, not the raw archive, or its state diverges from every
+    live consumer's (modules run at ingest, before the journal view a
+    live group gets — but *after* what the history tier archives)."""
+    from repro.core.modules import TypeFilter
+    log = Llog("mdt0", path=str(tmp_path / "j"), segment_records=8,
+               history=True)
+    proxy = LcapProxy({"mdt0": log},
+                      modules=[TypeFilter({R.CL_CREATE, R.CL_UNLINK,
+                                           R.CL_SETATTR, R.CL_RENAME})])
+    live = connect(proxy).subscribe("live")
+    state_live = {}
+    for i in range(20):
+        log.log(rec(R.CL_CREATE, oid=i))
+        log.log(rec(R.CL_HEARTBEAT, oid=100 + i, metrics=(0.5,)))
+        proxy.pump()
+        for _pid, b in live:
+            for x in range(len(b)):
+                apply_state(state_live, b.record(x))
+        live.commit()
+        proxy.flush_upstream()
+    assert not any(k[1] >= 100 for k in state_live)   # hb filtered live
+    boot = connect(proxy).subscribe(Subscription(group="boot", replay=True))
+    state_boot = {}
+    drain_state(boot, state_boot)
+    assert state_boot == state_live
+
+
+def test_cluster_replay_interrupted_by_failover_rewinds(tmp_path):
+    """A shard killed mid-bootstrap must not leave its re-routed
+    slots' history unreplayed: the survivors' active bootstraps rewind
+    and re-cover them (at-least-once through the failover)."""
+    cluster, logs = mk_cluster(tmp_path)
+    live = connect(cluster).subscribe("live")
+    state_live = {}
+    churn_cluster(cluster, logs, live, state_live, n=40)
+    boot = connect(cluster).subscribe(Subscription(group="boot",
+                                                   replay=True,
+                                                   max_records=4))
+    state_boot = {}
+    pairs = boot.fetch(4)                 # partial bootstrap on shards
+    for _pid, b in pairs:
+        for x in range(len(b)):
+            apply_state(state_boot, b.record(x))
+    assert boot.replaying
+    cluster.kill_shard(0)
+    drain_state(boot, state_boot)
+    assert boot.lost == [0]
+    assert state_boot == state_live

@@ -141,3 +141,70 @@ def test_data_consume_records_support_replay():
     got = r.fetch()
     ranges = sorted((rec.xattr["lo"], rec.xattr["hi"]) for _, rec in got)
     assert ranges == [(0, 512), (512, 1024)]
+
+
+def test_cache_invalidator_requeues_on_handler_failure():
+    """A persistent-mode invalidator whose handler dies mid-round must
+    not lose the fetched batches: the base poll requeues them and the
+    next poll retries from exactly where the failure hit."""
+    trackers, proxy = mk_world(2)
+    cache = {(oid, 1): f"page-{oid}" for oid in range(8)}
+    inv = CacheInvalidator(proxy, cache, mode="persistent")
+    for oid in range(8):
+        trackers[oid % 2].evict(oid, 1)
+    proxy.pump()
+
+    real = inv.handle_batch
+    calls = {"n": 0}
+
+    def flaky(pid, batch):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient handler failure")
+        real(pid, batch)
+
+    inv.handle_batch = flaky
+    try:
+        inv.poll()
+    except RuntimeError:
+        pass
+    else:
+        raise AssertionError("poll swallowed the handler failure")
+    # nothing was acknowledged unhandled; the retry sees every record
+    n = 0
+    for _ in range(10):
+        n += inv.poll()
+        proxy.pump()
+    assert not cache
+    assert inv.invalidated == 8
+    inv.close()
+
+
+def test_metrics_db_failed_close_parks_and_resumes(tmp_path):
+    """close(failed=True) on a crashed MetricsDB parks the durable
+    cursor (no TypeError from a mismatched override signature); a new
+    instance under the same name resumes exactly there."""
+    trackers, proxy = mk_world(1)
+    db = str(tmp_path / "metrics.sqlite")
+    w1 = MetricsDB(proxy, db, name="m0")
+    for step in range(10):
+        trackers[0].step_commit(step, loss=1.0, step_time_s=0.1, tokens=1)
+    proxy.pump()
+    w1.poll()                                  # commits: cursor at 10+
+    cursor = dict(w1.stream.resume_token)
+    for step in range(10, 20):
+        trackers[0].step_commit(step, loss=1.0, step_time_s=0.1, tokens=1)
+    proxy.pump()                               # dispatched, not yet polled
+    w1.close(failed=True)                      # crash: park, don't drop
+
+    w2 = MetricsDB(proxy, db, name="m0")
+    assert proxy.stats["resumed"] == 1
+    assert w2.stream.resumed
+    assert w2.stream.resume_token == cursor    # resumed at the ack cursor
+    n = 0
+    for _ in range(10):
+        n += w2.poll()
+        proxy.pump()
+    assert n == 10                             # only the unacked backlog
+    assert w2.query("SELECT COUNT(*) FROM events")[0][0] == 20
+    w2.close()
