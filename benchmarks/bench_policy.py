@@ -1,0 +1,224 @@
+"""Policy engine: mirror bootstrap + sustained action throughput.
+
+Two measurements over the same churn-heavy workload (files created,
+attr-spammed, renamed, mostly unlinked, heartbeat chatter):
+
+1. **Mirror bootstrap**: wall time for a fresh ``NamespaceMirror`` to
+   reconstruct namespace state via ``Subscription(replay=True)`` from
+   (a) a raw retained history (``compactor=None`` — the full-journal
+   replay a Robinhood-style engine would otherwise need) and (b) the
+   compacted history tier.  Both bootstraps must reproduce the live
+   mirror's state exactly before their timings count.
+2. **Sustained actions/sec**: churn drives the mirror + a SETATTR-match
+   rule; every matched target's action chain runs NEW -> UPDATE ->
+   COMPLETED -> PURGED through the proxy (the engine's journal is a
+   registered producer), and the reconciler must report zero
+   discrepancies at the end.  Reported: action records/sec through the
+   full emit -> dispatch -> consume loop.
+
+Run:  PYTHONPATH=src python benchmarks/bench_policy.py
+      PYTHONPATH=src python benchmarks/bench_policy.py --smoke
+
+``--smoke`` is the CI mode: a reduced workload that fails (exit 1)
+when bootstrap-from-history is less than {SMOKE_MIN_SPEEDUP}x faster
+than full-journal replay, or the reconciler finds a discrepancy.
+Writes BENCH_policy.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import records as R                       # noqa: E402
+from repro.core.history import Compactor, HistoryStore    # noqa: E402
+from repro.core.llog import Llog                          # noqa: E402
+from repro.core.proxy import LcapProxy                    # noqa: E402
+from repro.core.session import Subscription, connect      # noqa: E402
+from repro.policy import (NamespaceMirror, PolicyEngine,  # noqa: E402
+                          PolicyRule, reconcile)
+
+SMOKE_MIN_SPEEDUP = 3.0
+
+
+def churn(log, start: int, n_files: int, setattrs: int, unlink_pct: int,
+          hb_every: int) -> None:
+    for i in range(start, start + n_files):
+        log.log(R.ChangelogRecord(type=R.CL_CREATE, tfid=R.Fid(1, i, 0),
+                                  pfid=R.Fid(1, 0, 0), name=b"f%07d" % i))
+        for _ in range(setattrs):
+            log.log(R.ChangelogRecord(type=R.CL_SETATTR,
+                                      tfid=R.Fid(1, i, 0),
+                                      pfid=R.Fid(1, 0, 0),
+                                      shard=(0, i % 16, 0, 0),
+                                      metrics=(float(i % 7),)))
+        log.log(R.ChangelogRecord(type=R.CL_RENAME, tfid=R.Fid(1, i, 0),
+                                  pfid=R.Fid(1, 0, 0), name=b"g%07d" % i,
+                                  sname=b"f%07d" % i, sfid=R.Fid(1, i, 0)))
+        if i % 100 < unlink_pct:
+            log.log(R.ChangelogRecord(type=R.CL_UNLINK, tfid=R.Fid(1, i, 0),
+                                      pfid=R.Fid(1, 0, 0),
+                                      name=b"g%07d" % i))
+        if i % hb_every == 0:
+            log.log(R.ChangelogRecord(type=R.CL_HEARTBEAT,
+                                      tfid=R.Fid(2, i % 16, 0),
+                                      metrics=(0.1 * (i % 7),)))
+
+
+def bootstrap_workload(workdir: str, compact: bool, n_files: int,
+                       setattrs: int) -> dict:
+    """Churn -> live mirror (journal trims into history) -> fresh
+    mirror bootstrap; returns timings."""
+    path = os.path.join(workdir, "compacted" if compact else "raw")
+    os.makedirs(path)
+    store = HistoryStore(os.path.join(path, "j.hist"),
+                         compactor=Compactor() if compact else None)
+    log = Llog("mdt0", path=os.path.join(path, "j"), segment_records=1024,
+               history=store)
+    proxy = LcapProxy({"mdt0": log})
+    live = NamespaceMirror(proxy, group="live", replay=None)
+
+    t0 = time.perf_counter()
+    done = 0
+    batch_files = max(1, n_files // 50)
+    while done < n_files:
+        churn(log, done, min(batch_files, n_files - done), setattrs,
+              unlink_pct=80, hb_every=10)
+        done += batch_files
+        proxy.pump()
+        live.poll(1 << 20)
+        proxy.flush_upstream()
+    ingest_s = time.perf_counter() - t0
+    store.compact_now()
+
+    boot = NamespaceMirror(proxy, group="boot", replay=True)
+    t0 = time.perf_counter()
+    boot.bootstrap(max_records=8192)
+    bootstrap_s = time.perf_counter() - t0
+    assert boot.snapshot() == live.snapshot(), "bootstrap diverged"
+    return {"records_total": log.last_index,
+            "history_records": store.record_count,
+            "replayed": boot.stream.replayed,
+            "entries": len(boot.entries),
+            "ingest_s": round(ingest_s, 4),
+            "bootstrap_s": round(bootstrap_s, 4)}
+
+
+def actions_workload(workdir: str, n_files: int, setattrs: int) -> dict:
+    """Sustained lifecycle throughput: churn -> rule matches -> full
+    NEW/UPDATE/COMPLETED/PURGED chains through the proxy, with an
+    action-stream consumer group draining them."""
+    path = os.path.join(workdir, "actions")
+    os.makedirs(path)
+    log = Llog("mdt0", path=os.path.join(path, "j"), segment_records=1024,
+               history=True)
+    proxy = LcapProxy({"mdt0": log})
+    mirror = NamespaceMirror(proxy)
+    # match every target whose last writer reported metrics (the churn
+    # SETATTRs carry them) — metrics_min requires the field's presence
+    engine = PolicyEngine(
+        mirror, [PolicyRule("attr", metrics_min=0.0)],
+        target=proxy, path=os.path.join(path, "act"))
+    agent = connect(proxy).subscribe(Subscription(
+        group="agent", types=R.CL_ACTION_TYPES, auto_commit=False))
+
+    consumed = 0
+    t0 = time.perf_counter()
+    done = 0
+    batch_files = max(1, n_files // 50)
+    while done < n_files:
+        churn(log, done, min(batch_files, n_files - done), setattrs,
+              unlink_pct=50, hb_every=10)
+        done += batch_files
+        proxy.pump()
+        mirror.poll(1 << 20)
+        engine.evaluate()
+        engine.run_pending()
+        engine.janitor_sweep()
+        proxy.pump()
+        for _pid, b in agent.fetch(1 << 20):
+            consumed += len(b)
+        agent.commit()
+        proxy.flush_upstream()
+    # drain the tail
+    for _ in range(20):
+        proxy.pump()
+        mirror.poll(1 << 20)
+        engine.evaluate()
+        engine.run_pending()
+        proxy.pump()
+        for _pid, b in agent.fetch(1 << 20):
+            consumed += len(b)
+        agent.commit()
+    wall_s = time.perf_counter() - t0
+    report = reconcile(engine, proxy)
+    return {"action_records": engine.log.last_index,
+            "consumed": consumed,
+            "chains": engine.stats["emitted"],
+            "purged": engine.stats["purged"],
+            "wall_s": round(wall_s, 4),
+            "actions_per_s": round(engine.log.last_index /
+                                   max(wall_s, 1e-9)),
+            "reconcile_ok": report.ok,
+            "reconcile": str(report)}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="policy engine: mirror bootstrap + action throughput")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: small workload, fail below the "
+                         f"{SMOKE_MIN_SPEEDUP}x bootstrap-speedup floor")
+    ap.add_argument("--files", type=int, default=None)
+    ap.add_argument("--setattrs", type=int, default=6)
+    args = ap.parse_args()
+    n_files = args.files or (1500 if args.smoke else 12000)
+
+    workdir = tempfile.mkdtemp(prefix="bench_policy.")
+    try:
+        raw = bootstrap_workload(workdir, compact=False, n_files=n_files,
+                                 setattrs=args.setattrs)
+        compacted = bootstrap_workload(workdir, compact=True,
+                                       n_files=n_files,
+                                       setattrs=args.setattrs)
+        actions = actions_workload(workdir, n_files=max(200, n_files // 4),
+                                   setattrs=2)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    speedup = raw["bootstrap_s"] / max(compacted["bootstrap_s"], 1e-9)
+    payload = {
+        "bench": "policy", "smoke": bool(args.smoke),
+        "workload": {"files": n_files, "setattrs_per_file": args.setattrs,
+                     "unlink_pct": 80, "heartbeat_every": 10},
+        "bootstrap_full_journal": raw,
+        "bootstrap_from_history": compacted,
+        "bootstrap_speedup": round(speedup, 2),
+        "actions": actions,
+    }
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_policy.json")
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    print(json.dumps(payload, indent=2))
+    if speedup < SMOKE_MIN_SPEEDUP:
+        print(f"FAIL: bootstrap-from-history {speedup:.2f}x < "
+              f"{SMOKE_MIN_SPEEDUP}x full-journal replay", file=sys.stderr)
+        return 1
+    if not actions["reconcile_ok"]:
+        print(f"FAIL: {actions['reconcile']}", file=sys.stderr)
+        return 1
+    print(f"bootstrap-from-history {speedup:.1f}x faster than full-journal "
+          f"replay; {actions['actions_per_s']} action records/s sustained")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

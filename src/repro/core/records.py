@@ -72,7 +72,22 @@ CL_ELASTIC_LEAVE = 38    # host/pod left (failure or scale-down)
 CL_STRAGGLER = 39        # straggler verdict for a host
 CL_EVICT = 40            # cache invalidation notice (Ganesha analogue)
 
-CL_LAST = 41
+# Policy-action lifecycle types (the HSM hsm/actions analogue): a policy
+# engine emits these *into* the changelog fabric, so actions are
+# themselves a stream any consumer can subscribe to with pushdown.
+# tfid is the TARGET object's fid (not an action id), so one action's
+# whole NEW -> UPDATE -> COMPLETED -> PURGED chain shares the target's
+# cr_prev chain and — under FID-hash cluster routing — one shard.
+CL_ACTION_NEW = 41       # a policy rule matched: action enqueued
+CL_ACTION_UPDATE = 42    # action state advanced (e.g. started)
+CL_ACTION_COMPLETED = 43  # action finished (status: succeeded/failed)
+CL_ACTION_PURGED = 44    # janitor trimmed the completed action chain
+
+CL_LAST = 45
+
+#: the action-lifecycle subset (subscription masks, reconciler replay)
+CL_ACTION_TYPES = frozenset({CL_ACTION_NEW, CL_ACTION_UPDATE,
+                             CL_ACTION_COMPLETED, CL_ACTION_PURGED})
 
 TYPE_NAMES = {
     CL_MARK: "MARK", CL_CREATE: "CREAT", CL_MKDIR: "MKDIR",
@@ -82,6 +97,8 @@ TYPE_NAMES = {
     CL_STEP_COMMIT: "STEP", CL_CKPT_WRITE: "CKPTW", CL_CKPT_COMMIT: "CKPTC",
     CL_DATA_CONSUME: "DATA", CL_HEARTBEAT: "HBEAT", CL_ELASTIC_JOIN: "EJOIN",
     CL_ELASTIC_LEAVE: "ELEAV", CL_STRAGGLER: "STRAG", CL_EVICT: "EVICT",
+    CL_ACTION_NEW: "ACTNW", CL_ACTION_UPDATE: "ACTUP",
+    CL_ACTION_COMPLETED: "ACTOK", CL_ACTION_PURGED: "ACTPG",
 }
 
 # ---------------------------------------------------------------------------

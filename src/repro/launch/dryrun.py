@@ -22,8 +22,12 @@ Two artifacts per cell:
    g(b) = g0 + b*g1 (once per MICROBATCH, batch-independent: FSDP
    weight all-gathers — g ~ 0 when XLA hoists them out of the loop),
    and e + b*c per local batch row (fwd+bwd compute/activations).
-   Train cells use 6 probes ((b,B) in {1,2}^2 at M=1, plus (1,2) and
-   (2,2) at M=2); serve cells use the 4-point M=1 model.  Every number
+   Train cells use 6 probes ((b,B) in PROBE_BODIES x {1,2} at M=1,
+   plus two M=2 points); serve cells use the 4-point M=1 model.  The
+   probe depths are {2,3} bodies, NOT {1,2}: a single-body graph
+   compiles to a qualitatively different schedule (whole-graph fusion,
+   different all-gather placement), which poisons the linear fit —
+   both probe points must sit in the multi-layer regime.  Every number
    still derives from a compiled artifact (assignment: cost_analysis +
    as_text); tests/test_roofline.py validates the model against a fully
    unrolled small config.
@@ -83,6 +87,8 @@ def _compile_and_measure(cfg, shape, rules, mesh, n_micro,
         lowered = jitted.lower(*args)
         compiled = lowered.compile()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # older jax: one dict per program
+        cost = cost[0] if cost else {}
     per_coll = collective_bytes(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -100,6 +106,40 @@ def _reduced(cfg, k):
     if cfg.is_encoder_decoder:
         kw["n_encoder_layers"] = k
     return cfg.replace(**kw)
+
+
+#: probe depths for the differential solve — both in the multi-layer
+#: regime (see the module docstring for why b=1 is excluded)
+PROBE_BODIES = (2, 3)
+
+
+def solve_probe_model(pts, metric):
+    """Fit f(b, B, M) = opt(b) + M*g(b) + B*(e + b*c) to the probe
+    compiles in ``pts`` (keyed ``(bodies, B_local, M)``), for one
+    metric.  Returns the coefficient dict {o0, o1, g0, g1, e, c}."""
+    b1, b2 = PROBE_BODIES
+    db = b2 - b1
+    f11, f21 = pts[(b1, 1, 1)][metric], pts[(b2, 1, 1)][metric]
+    f12, f22 = pts[(b1, 2, 1)][metric], pts[(b2, 2, 1)][metric]
+    c = (f22 - f21 - f12 + f11) / db
+    e = f12 - f11 - b1 * c
+    a1 = (f21 - f11) / db - c       # = o1 + g1 (one micro at M=1)
+    a0 = f11 - b1 * a1 - e - b1 * c  # = o0 + g0
+    g0 = g1 = 0.0
+    if (b1, 2, 2) in pts:
+        gb1 = pts[(b1, 2, 2)][metric] - f12     # g(b1) = g0 + b1*g1
+        gb2 = pts[(b2, 2, 2)][metric] - f22     # g(b2) = g0 + b2*g1
+        g1 = (gb2 - gb1) / db
+        g0 = gb1 - b1 * g1
+    return {"o0": a0 - g0, "o1": a1 - g1, "g0": g0, "g1": g1,
+            "e": e, "c": c}
+
+
+def predict_probe_model(coeffs, bodies, b_local, n_micro=1):
+    """Evaluate the fitted per-device cost model at production depth."""
+    return (coeffs["o0"] + bodies * coeffs["o1"]
+            + n_micro * (coeffs["g0"] + bodies * coeffs["g1"])
+            + b_local * (coeffs["e"] + bodies * coeffs["c"]))
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
@@ -185,7 +225,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         b_loc_full = max(1, shape.global_batch // max(dp, 1))
         try:
             pts = {}
-            for k in (1, 2):          # bodies
+            for k in PROBE_BODIES:    # bodies
                 for bl in (1, 2):     # local batch rows per device
                     pshape = dataclasses.replace(
                         shape, global_batch=max(dp, 1) * bl)
@@ -196,7 +236,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
             if shape.kind == "train" and n_micro_full > 1:
                 pshape = dataclasses.replace(shape,
                                              global_batch=max(dp, 1) * 2)
-                for k in (1, 2):      # measure the per-micro term g(b)
+                for k in PROBE_BODIES:  # measure the per-micro term g(b)
                     with use_rules(rules):
                         pts[(k, 2, 2)] = _compile_and_measure(
                             _reduced(cfg, k), pshape, rules, mesh, 2,
@@ -208,26 +248,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
 
         corrected = {}
         coeffs = {}
-        M_full = n_micro_full
         for m in METRICS:
-            f11, f21 = pts[(1, 1, 1)][m], pts[(2, 1, 1)][m]
-            f12, f22 = pts[(1, 2, 1)][m], pts[(2, 2, 1)][m]
-            c = f22 - f21 - f12 + f11
-            e = f12 - f11 - c
-            a1 = f21 - f11 - c      # = o1 + g1 (one micro at M=1)
-            a0 = f11 - a1 - e - c   # = o0 + g0
-            g0 = g1 = 0.0
-            if (1, 2, 2) in pts:
-                gb1 = pts[(1, 2, 2)][m] - f12       # g(1) = g0 + g1
-                gb2 = pts[(2, 2, 2)][m] - f22       # g(2) = g0 + 2*g1
-                g1 = gb2 - gb1
-                g0 = gb1 - g1
-            o0, o1 = a0 - g0, a1 - g1
-            coeffs[m] = {"o0": o0, "o1": o1, "g0": g0, "g1": g1,
-                         "e": e, "c": c}
-            corrected[m] = (o0 + n_bodies * o1 +
-                            M_full * (g0 + n_bodies * g1) +
-                            b_loc_full * (e + n_bodies * c))
+            coeffs[m] = solve_probe_model(pts, m)
+            corrected[m] = predict_probe_model(coeffs[m], n_bodies,
+                                               b_loc_full, n_micro_full)
         result["probe_walls_s"] = {str(k): round(v["wall_s"], 1)
                                    for k, v in pts.items()}
         result["probe_coeffs"] = coeffs

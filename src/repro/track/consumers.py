@@ -39,15 +39,27 @@ from ..core.session import Subscription, connect
 
 class _GroupWorker:
     """Base: subscribe a Stream, process batches, commit after each poll
-    round (acks "may be delayed and batched", paper §II)."""
+    round (acks "may be delayed and batched", paper §II).
+
+    ``replay`` passes straight through to the ``Subscription``: a worker
+    built with ``replay=True`` bootstraps from the compacted history
+    tier before its live stream starts (``bootstrapping`` reports the
+    phase) — the policy engine's namespace mirror rides on this."""
 
     def __init__(self, proxy, group: str, flags: Optional[int] = None,
                  types: Optional[Iterable[int]] = None,
-                 name: Optional[str] = None, mode: str = "persistent"):
+                 name: Optional[str] = None, mode: str = "persistent",
+                 replay=None):
         self.session = connect(proxy)
         self.stream = self.session.subscribe(Subscription(
             group=None if mode == "ephemeral" else group, mode=mode,
-            flags=flags, types=types, name=name, auto_commit=False))
+            flags=flags, types=types, name=name, auto_commit=False,
+            replay=replay))
+
+    @property
+    def bootstrapping(self) -> bool:
+        """True while the history replay is still streaming."""
+        return self.stream.replaying
 
     def poll(self, max_records: int = 256) -> int:
         n = 0
@@ -141,21 +153,35 @@ class MetricsDB(_GroupWorker):
 class CheckpointCommitter(_GroupWorker):
     """Watches CKPT_WRITE records; commits when all shards of a step are
     present.  The shared manifest dir is the coordination point, so the
-    group can be load-balanced (any member may complete a step)."""
+    group can be load-balanced (any member may complete a step).
+
+    Coordination is lock-free across processes: each CKPT_WRITE record
+    becomes its *own* ``step-S.shard-N.json`` file (atomic tmp+rename,
+    idempotent — the content is a pure function of the record), and a
+    step commits when the directory holds ``total_shards`` shard files.
+    A shared read-modify-write state file would lose updates between
+    group members in different processes (a per-instance lock cannot
+    order their write-backs); per-shard files cannot collide, and two
+    members racing to commit write byte-identical manifests."""
 
     def __init__(self, proxy, manifest_dir: str, group: str = "ckpt",
                  name: Optional[str] = None):
         super().__init__(proxy, group, types={R.CL_CKPT_WRITE}, name=name)
         self.dir = manifest_dir
         os.makedirs(manifest_dir, exist_ok=True)
-        self._lock = threading.Lock()
         self.committed: Set[int] = set()
 
-    def _state_path(self, step: int) -> str:
-        return os.path.join(self.dir, f"step-{step:08d}.shards.json")
+    def _shard_path(self, step: int, shard_id: int) -> str:
+        return os.path.join(self.dir,
+                            f"step-{step:08d}.shard-{shard_id:08d}.json")
 
     def manifest_path(self, step: int) -> str:
         return os.path.join(self.dir, f"step-{step:08d}.manifest.json")
+
+    def _shard_files(self, step: int) -> List[str]:
+        prefix = f"step-{step:08d}.shard-"
+        return [os.path.join(self.dir, f) for f in os.listdir(self.dir)
+                if f.startswith(prefix) and f.endswith(".json")]
 
     def handle(self, pid: str, rec: R.ChangelogRecord) -> None:
         if rec.type != R.CL_CKPT_WRITE:
@@ -163,27 +189,51 @@ class CheckpointCommitter(_GroupWorker):
         step = rec.tfid.ver
         shard_id = rec.tfid.oid
         total = (rec.xattr or {}).get("total_shards", 0)
-        with self._lock:
-            path = self._state_path(step)
-            state = {"total": total, "shards": {}}
-            if os.path.exists(path):
+        if step in self.committed or os.path.exists(self.manifest_path(step)):
+            return    # redelivered record of a committed step: no litter
+        path = self._shard_path(step, shard_id)
+        # unique tmp per writer: two processes landing the same shard
+        # (redelivery) must not corrupt each other's rename source
+        tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "w") as fh:
+            json.dump({"shard": shard_id, "total": total,
+                       "path": rec.name.decode(), "producer": pid,
+                       "bytes": (rec.metrics or (0.0,))[0]}, fh)
+        os.replace(tmp, path)
+        self._try_commit(step, total)
+
+    def _try_commit(self, step: int, total_hint: int = 0) -> None:
+        paths = self._shard_files(step)
+        if total_hint and len(paths) < total_hint:
+            return      # cannot be complete yet: skip the JSON read pass
+        shards: Dict[str, dict] = {}
+        total = total_hint
+        for path in paths:
+            try:
                 with open(path) as fh:
-                    state = json.load(fh)
-            state["shards"][str(shard_id)] = {
-                "path": rec.name.decode(), "producer": pid,
-                "bytes": (rec.metrics or (0.0,))[0]}
-            state["total"] = max(state["total"], total)
-            tmp = path + f".tmp.{threading.get_ident()}"
+                    entry = json.load(fh)
+            except (OSError, ValueError):
+                continue        # racing writer; the next record retries
+            total = max(total, entry.get("total", 0))
+            shards[str(entry["shard"])] = {
+                "path": entry["path"], "producer": entry["producer"],
+                "bytes": entry["bytes"]}
+        if total and len(shards) >= total:
+            tmp = (self.manifest_path(step)
+                   + f".tmp.{os.getpid()}.{threading.get_ident()}")
             with open(tmp, "w") as fh:
-                json.dump(state, fh)
-            os.replace(tmp, path)
-            if state["total"] and len(state["shards"]) == state["total"]:
-                with open(self.manifest_path(step) + ".tmp", "w") as fh:
-                    json.dump({"step": step, "complete": True,
-                               "shards": state["shards"]}, fh)
-                os.replace(self.manifest_path(step) + ".tmp",
-                           self.manifest_path(step))
-                self.committed.add(step)
+                json.dump({"step": step, "complete": True,
+                           "shards": shards}, fh)
+            os.replace(tmp, self.manifest_path(step))
+            self.committed.add(step)
+            # the manifest is the durable record; dropping the shard
+            # files keeps the directory (and the per-record listdir in
+            # _shard_files) bounded by *in-flight* steps only
+            for path in paths:
+                try:
+                    os.remove(path)
+                except OSError:
+                    pass        # a racing member already cleaned it
 
     def latest_committed(self) -> Optional[int]:
         steps = [int(f.split("-")[1].split(".")[0])
@@ -193,21 +243,37 @@ class CheckpointCommitter(_GroupWorker):
 
 class StragglerDetector(_GroupWorker):
     """EWMA of per-host step durations; a host whose EWMA exceeds
-    ``threshold`` x the fleet median is flagged."""
+    ``threshold`` x the fleet median is flagged.
+
+    Hosts that leave the fleet are evicted from the EWMA map: an
+    ELASTIC_LEAVE record drops the host immediately, and a host whose
+    last sample is more than ``stale_after_s`` (record time) behind the
+    newest sample in the stream is aged out.  Without eviction a
+    departed straggler's entry skews the fleet median forever and keeps
+    ``flagged`` pinned on a host that no longer exists."""
 
     def __init__(self, proxy, group: str = "health", alpha: float = 0.3,
-                 threshold: float = 1.5, name: Optional[str] = None):
+                 threshold: float = 1.5, stale_after_s: float = 60.0,
+                 name: Optional[str] = None):
         super().__init__(proxy, group,
-                         types={R.CL_HEARTBEAT, R.CL_STEP_COMMIT}, name=name)
+                         types={R.CL_HEARTBEAT, R.CL_STEP_COMMIT,
+                                R.CL_ELASTIC_LEAVE}, name=name)
         self.alpha = alpha
         self.threshold = threshold
+        self.stale_after_ns = int(stale_after_s * 1e9)
         self.ewma: Dict[int, float] = {}
+        self.last_seen: Dict[int, int] = {}    # host -> cr_time (ns)
         self.flagged: Set[int] = set()
+        self._clock = 0                        # newest cr_time seen
 
     def handle(self, pid: str, rec: R.ChangelogRecord) -> None:
+        self._clock = max(self._clock, rec.time)
+        host = rec.tfid.oid
+        if rec.type == R.CL_ELASTIC_LEAVE:
+            self._evict(host)
+            return
         if rec.type not in (R.CL_HEARTBEAT, R.CL_STEP_COMMIT):
             return
-        host = rec.tfid.oid
         m = rec.metrics or ()
         if rec.type == R.CL_STEP_COMMIT:
             # step_commit metrics are (loss, step_time_s, tokens); be
@@ -218,9 +284,27 @@ class StragglerDetector(_GroupWorker):
         prev = self.ewma.get(host)
         self.ewma[host] = dt if prev is None else \
             self.alpha * dt + (1 - self.alpha) * prev
+        self.last_seen[host] = max(self.last_seen.get(host, 0), rec.time)
+        self._evict_stale()
         self._reflag()
 
+    def _evict(self, host: int) -> None:
+        self.ewma.pop(host, None)
+        self.last_seen.pop(host, None)
+        self.flagged.discard(host)
+        self._reflag()
+
+    def _evict_stale(self) -> None:
+        horizon = self._clock - self.stale_after_ns
+        for host in [h for h, t in self.last_seen.items() if t < horizon]:
+            self.ewma.pop(host, None)
+            self.last_seen.pop(host, None)
+            self.flagged.discard(host)
+
     def _reflag(self) -> None:
+        # flagged can only shrink below 2 known hosts: a lone survivor
+        # has no fleet to straggle behind
+        self.flagged &= set(self.ewma)
         if len(self.ewma) < 2:
             return
         vals = sorted(self.ewma.values())

@@ -58,12 +58,18 @@ def test_compressed_psum_matches_exact_within_tolerance():
         from jax.sharding import Mesh, PartitionSpec as P
         from repro.optim.compress import compressed_psum, plain_psum_mean
 
+        if hasattr(jax, "shard_map"):                # jax >= 0.5
+            shard_map, replication_kw = jax.shard_map, {"check_vma": False}
+        else:
+            from jax.experimental.shard_map import shard_map
+            replication_kw = {"check_rep": False}
+
         mesh = jax.make_mesh((4,), ("dp",))
         key = jax.random.PRNGKey(0)
         g_global = jax.random.normal(key, (4, 64))   # per-device grads
 
-        @partial(jax.shard_map, mesh=mesh, in_specs=(P("dp"), P("dp")),
-                 out_specs=(P("dp"), P("dp")), check_vma=False)
+        @partial(shard_map, mesh=mesh, in_specs=(P("dp"), P("dp")),
+                 out_specs=(P("dp"), P("dp")), **replication_kw)
         def step(g, e):
             gq, e = compressed_psum({"g": g}, {"g": e}, "dp")
             return gq["g"], e["g"]

@@ -1,5 +1,6 @@
 """Validate the differential-probe cost model: the 4-point linear solve
-must reproduce the cost_analysis of a FULLY UNROLLED compile of the
+(probe depths PROBE_BODIES, both in the multi-layer regime) must
+reproduce the cost_analysis of a FULLY UNROLLED compile of the
 production-depth config (all numbers from compiled artifacts)."""
 
 import os
@@ -19,7 +20,9 @@ def test_probe_extrapolation_matches_unrolled_compile():
         from repro.models.config import ShapeConfig
         from repro.runtime import specs as SP
         from repro.runtime.sharding import use_rules
-        from repro.launch.dryrun import _compile_and_measure, _reduced
+        from repro.launch.dryrun import (PROBE_BODIES, _compile_and_measure,
+                                         _reduced, predict_probe_model,
+                                         solve_probe_model)
 
         cfg = C.get_smoke("granite-8b").replace(n_layers=5)
         mesh = jax.make_mesh((2, 2), ("data", "model"))
@@ -29,11 +32,11 @@ def test_probe_extrapolation_matches_unrolled_compile():
 
         ML.UNROLL_BLOCKS = MS.UNROLL_CHUNKS = T.UNROLL_LAYERS = True
         pts = {}
-        for k in (1, 2):
+        for k in PROBE_BODIES:
             for bl in (1, 2):
                 ps = dataclasses.replace(shape, global_batch=dp * bl)
                 with use_rules(rules):
-                    pts[(k, bl)] = _compile_and_measure(
+                    pts[(k, bl, 1)] = _compile_and_measure(
                         _reduced(cfg, k), ps, rules, mesh, 1, "blockwise")
         # ground truth: production depth (5 bodies), local batch 4,
         # fully unrolled -> cost_analysis is exact
@@ -45,13 +48,7 @@ def test_probe_extrapolation_matches_unrolled_compile():
 
         out = {}
         for m in ("flops", "bytes", "coll"):
-            f11, f21 = pts[(1, 1)][m], pts[(2, 1)][m]
-            f12, f22 = pts[(1, 2)][m], pts[(2, 2)][m]
-            c = f22 - f21 - f12 + f11
-            e = f12 - f11 - c
-            a1 = f21 - f11 - c
-            a0 = f11 - a1 - e - c
-            pred = a0 + 5 * a1 + 4 * e + 4 * 5 * c
+            pred = predict_probe_model(solve_probe_model(pts, m), 5, 4)
             out[m] = (pred, truth[m])
         print(json.dumps(out))
         for m, (pred, tru) in out.items():

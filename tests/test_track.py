@@ -72,6 +72,62 @@ def test_checkpoint_commit_protocol(tmp_path):
     assert os.path.exists(committers[0].manifest_path(step))
 
 
+def test_checkpoint_committer_concurrent_members_no_lost_update(tmp_path):
+    """Two load-balanced group members recording *different* shards of
+    the same step concurrently must not lose either update.  The old
+    shared ``step-*.shards.json`` was a read-modify-write that a
+    per-instance lock cannot order across members; per-shard files
+    cannot collide."""
+    import threading
+
+    trackers, proxy = mk_world(2)
+    c1 = CheckpointCommitter(proxy, str(tmp_path / "manifests"))
+    c2 = CheckpointCommitter(proxy, str(tmp_path / "manifests"))
+    steps = list(range(25))
+
+    def rec_for(step, shard):
+        return R.ChangelogRecord(
+            type=R.CL_CKPT_WRITE, tfid=R.Fid(1, shard, step),
+            name=f"/ckpt/s{shard}".encode(), metrics=(1024.0,),
+            xattr={"total_shards": 2})
+
+    barrier = threading.Barrier(2)
+    errors = []
+
+    def member(committer, shard):
+        try:
+            for step in steps:
+                barrier.wait()      # maximally overlap the two writers
+                committer.handle("host0", rec_for(step, shard))
+        except Exception as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=member, args=(c1, 0)),
+               threading.Thread(target=member, args=(c2, 1))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    import json
+    for step in steps:
+        path = c1.manifest_path(step)
+        assert os.path.exists(path), f"step {step} never committed"
+        with open(path) as fh:
+            manifest = json.load(fh)
+        assert set(manifest["shards"]) == {"0", "1"}, step
+    # committed steps leave no shard-file litter behind (the directory
+    # stays bounded by in-flight steps)
+    leftovers = [f for f in os.listdir(c1.dir) if ".shard-" in f]
+    assert leftovers == []
+    # a redelivered record of a committed step neither litters nor
+    # rewrites the manifest
+    c1.handle("host0", rec_for(steps[0], 0))
+    assert not [f for f in os.listdir(c1.dir) if ".shard-" in f]
+    c1.close()
+    c2.close()
+
+
 def test_straggler_detection():
     trackers, proxy = mk_world(4)
     det = StragglerDetector(proxy)
@@ -80,6 +136,58 @@ def test_straggler_detection():
             t.heartbeat(step, step_time_s=0.1 if h != 2 else 0.5)
     pump_all(proxy, [det])
     assert det.flagged == {2}
+
+
+def test_straggler_evicted_on_leave():
+    """flag -> leave -> unflag: a straggler that leaves the fleet
+    (ELASTIC_LEAVE) is evicted from the EWMA map so it stops skewing
+    the fleet median and ``flagged`` is not pinned forever."""
+    trackers, proxy = mk_world(4)
+    det = StragglerDetector(proxy)
+    for step in range(10):
+        for h, t in enumerate(trackers):
+            t.heartbeat(step, step_time_s=0.1 if h != 2 else 0.5)
+    pump_all(proxy, [det])
+    assert det.flagged == {2}
+    trackers[2].elastic(joined=False, n_hosts=3, step=10)
+    pump_all(proxy, [det])
+    assert 2 not in det.ewma
+    assert det.flagged == set()
+    # the survivors keep reporting; nobody is flagged against a median
+    # the departed host no longer distorts
+    for step in range(10, 15):
+        for h, t in enumerate(trackers):
+            if h != 2:
+                t.heartbeat(step, step_time_s=0.1)
+    pump_all(proxy, [det])
+    assert det.flagged == set()
+
+
+def test_straggler_stale_host_aged_out():
+    """A host that silently stops heartbeating (no ELASTIC_LEAVE) is
+    aged out once its last sample falls ``stale_after_s`` behind the
+    newest sample in the stream."""
+    trackers, proxy = mk_world(3)
+    det = StragglerDetector(proxy, stale_after_s=30.0)
+    t0 = R.now_ns()
+
+    def hb(host, step, dt, at_s):
+        trackers[host].llog.log(R.ChangelogRecord(
+            type=R.CL_HEARTBEAT, tfid=R.Fid(1, host, step),
+            time=t0 + int(at_s * 1e9), metrics=(dt,)))
+
+    for step in range(5):
+        for h in range(3):
+            hb(h, step, 0.1 if h != 2 else 0.5, at_s=step)
+    pump_all(proxy, [det])
+    assert det.flagged == {2}
+    # 40 stream-seconds later only hosts 0/1 are still alive
+    for step in range(5, 8):
+        for h in range(2):
+            hb(h, step, 0.1, at_s=40 + step)
+    pump_all(proxy, [det])
+    assert 2 not in det.ewma
+    assert det.flagged == set()
 
 
 def test_elastic_membership_plan():
