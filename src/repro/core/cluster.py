@@ -43,8 +43,11 @@ the owning shard (session.py, ``FanInStream``).
 from __future__ import annotations
 
 import itertools
+import os
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 from . import records as R
 from .errors import ClusterError
@@ -71,6 +74,46 @@ def fid_slot(key: Tuple[int, int, int], n_slots: int = DEFAULT_SLOTS) -> int:
     z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK
     z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK
     return (z ^ (z >> 31)) % n_slots
+
+
+def fid_slots(seq: np.ndarray, oid: np.ndarray, ver: np.ndarray,
+              n_slots: int = DEFAULT_SLOTS) -> np.ndarray:
+    """Vectorized ``fid_slot`` over FID columns (``batch.tfid_cols``):
+    the identical splitmix64 mix, computed with wrapping uint64
+    arithmetic across a whole batch at once."""
+    with np.errstate(over="ignore"):
+        z = (seq.astype(np.uint64) * np.uint64(0xBF58476D1CE4E5B9)
+             ^ oid.astype(np.uint64) * np.uint64(0x94D049BB133111EB)
+             ^ ver.astype(np.uint64) * np.uint64(_MIX))
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return ((z ^ (z >> np.uint64(31)))
+                % np.uint64(n_slots)).astype(np.int64)
+
+
+def _jax_fid_slots():
+    """The accelerator twin of ``fid_slots`` when the deployment opts
+    in (``REPRO_JAX_ROUTING=1``) and jax imports; None otherwise.  The
+    numpy path stays the default: on a CPU-only coordinator the jit
+    round-trip costs more than the mix."""
+    if os.environ.get("REPRO_JAX_ROUTING") != "1":
+        return None
+    try:
+        from ..kernels import stream_ops
+    except Exception:
+        return None
+    return stream_ops.fid_slots
+
+
+def batch_slots(batch: "R.RecordBatch",
+                n_slots: int = DEFAULT_SLOTS) -> np.ndarray:
+    """Slot of every record's target FID, straight off the batch's
+    decoded header columns."""
+    seq, oid, ver = batch.tfid_cols()
+    kernel = _jax_fid_slots()
+    if kernel is not None and n_slots < (1 << 16):
+        return kernel(seq, oid, ver, n_slots)
+    return fid_slots(seq, oid, ver, n_slots)
 
 
 class ClusterReplayReader:
@@ -102,12 +145,11 @@ class ClusterReplayReader:
     def read(self, start: int, max_records: int = 1024):
         batch, nxt = self._reader.read(start, max_records)
         if len(batch):
-            owner = self.cluster.slot_owner
-            n_slots = self.cluster.n_slots
-            rows = [i for i, key in enumerate(batch.keys())
-                    if owner[fid_slot(key, n_slots)] == self.shard_index]
-            if len(rows) != len(batch):
-                batch = batch.select(rows)
+            owner = np.asarray(self.cluster.slot_owner)
+            mine = owner[batch_slots(batch, self.cluster.n_slots)] \
+                == self.shard_index
+            if not bool(mine.all()):
+                batch = batch.select(np.flatnonzero(mine))
         return batch, nxt
 
 
@@ -306,15 +348,10 @@ class LcapCluster:
                 self.shard_acked[i].setdefault(pid, start - 1)
 
     # -------------------------------------------------------------- routing
-    def _partition(self, batch: R.RecordBatch) -> List[List[int]]:
+    def _partition(self, batch: R.RecordBatch) -> List[np.ndarray]:
         """Row indices per shard, in batch (= journal) order."""
-        rows: List[List[int]] = [[] for _ in self.shards]
-        owner = self.slot_owner
-        n_slots = self.n_slots
-        slot = fid_slot
-        for i, key in enumerate(batch.keys()):
-            rows[owner[slot(key, n_slots)]].append(i)
-        return rows
+        owner = np.asarray(self.slot_owner)[batch_slots(batch, self.n_slots)]
+        return [np.flatnonzero(owner == i) for i in range(len(self.shards))]
 
     def _route(self) -> int:
         """One routing round: read every journal forward, partition by
@@ -443,25 +480,23 @@ class LcapCluster:
                 end = self.cursors[pid]          # routed so far
                 offers: List[List[Tuple[str, R.RecordBatch, int]]] = \
                     [[] for _ in self.shards]
+                moved_mask = np.zeros(self.n_slots, dtype=bool)
+                moved_mask[list(moved)] = True
                 while lo < end:
                     batch = log.read(lo, self.batch_size)
                     if not batch:
                         break
-                    keep = [i for i, key in enumerate(batch.keys())
-                            if batch.packed_index(i) < end
-                            and fid_slot(key, self.n_slots) in moved]
-                    hi = batch.packed_index(len(batch) - 1)
-                    if keep:
-                        sub = batch.select(keep)
-                        by_shard: Dict[int, List[int]] = {}
-                        for j, key in enumerate(sub.keys()):
-                            owner = self.slot_owner[fid_slot(key,
-                                                             self.n_slots)]
-                            by_shard.setdefault(owner, []).append(j)
-                        for owner, rows in by_shard.items():
-                            offers[owner].append((pid, sub.select(rows),
-                                                  sub.packed_index(rows[-1])))
-                        redelivered += len(keep)
+                    slots = batch_slots(batch, self.n_slots)
+                    idx = batch.indices_np().astype(np.int64)
+                    keep = np.flatnonzero((idx < end) & moved_mask[slots])
+                    hi = int(idx[-1])
+                    if keep.size:
+                        owner = np.asarray(self.slot_owner)[slots[keep]]
+                        for o in np.unique(owner).tolist():
+                            rows = keep[owner == o]
+                            offers[o].append((pid, batch.select(rows),
+                                              int(idx[rows[-1]])))
+                        redelivered += int(keep.size)
                     lo = hi + 1
                 for i, shard_offers in enumerate(offers):
                     if shard_offers and self.alive[i]:

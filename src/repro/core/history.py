@@ -47,6 +47,8 @@ import struct
 import threading
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from . import records as R
 
 _LEN = struct.Struct("<I")
@@ -78,15 +80,33 @@ class Compactor:
         self.stats["records_in"] += n
         if n == 0:
             return batch
-        types = batch.types()
-        keys = batch.keys()
-        rows_by_key: Dict[tuple, List[int]] = {}
-        for i, k in enumerate(keys):
-            rows_by_key.setdefault(k, []).append(i)
+        # group rows per target FID with one stable lexsort over the
+        # decoded header columns; a change-point scan yields the
+        # per-FID segments, and three reduceat sums decide which
+        # segments can possibly drop anything — only those run the
+        # per-record fold, everything else passes through untouched
+        t = batch.types_np()
+        seq, oid, ver = batch.tfid_cols()
+        order = np.lexsort((np.arange(n), ver, oid, seq))
+        sseq, soid, sver = seq[order], oid[order], ver[order]
+        starts = np.flatnonzero(np.r_[True, (sseq[1:] != sseq[:-1])
+                                      | (soid[1:] != soid[:-1])
+                                      | (sver[1:] != sver[:-1])])
+        st = t[order]
+        destroy = np.isin(st, sorted(DESTROYS)).astype(np.int64)
+        rename = (st == R.CL_RENAME).astype(np.int64)
+        idem = np.isin(st, sorted(IDEMPOTENT)).astype(np.int64)
+        interesting = ((np.add.reduceat(destroy, starts) > 0)
+                       | (np.add.reduceat(rename, starts) > 1)
+                       | (np.add.reduceat(idem, starts) > 1))
         drop = set()
         replace: Dict[int, bytes] = {}
-        for rows in rows_by_key.values():
-            self._compact_key(batch, types, rows, drop, replace)
+        if bool(interesting.any()):
+            types = t.tolist()
+            bounds = np.r_[starts, n]
+            for k in np.flatnonzero(interesting).tolist():
+                rows = order[bounds[k]:bounds[k + 1]].tolist()
+                self._compact_key(batch, types, rows, drop, replace)
         if not drop and not replace:
             self.stats["records_out"] += n
             return batch

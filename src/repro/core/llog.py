@@ -44,6 +44,8 @@ import struct
 import threading
 from typing import Dict, Iterable, List, Optional, Tuple
 
+import numpy as np
+
 from . import records as R
 
 _LEN = struct.Struct("<I")
@@ -75,6 +77,15 @@ class _Segment:
         self.offsets.append(len(self.data))
         self.lengths.append(len(buf))
         self.data += buf
+
+    def seal(self) -> None:
+        """Freeze the segment: immutable bytes (batch views then
+        extract records with a single copy instead of locking a live
+        bytearray) and int64 offset/length columns (batch views slice
+        them zero-copy instead of re-materializing per read)."""
+        self.data = bytes(self.data)
+        self.offsets = np.asarray(self.offsets, dtype=np.int64)
+        self.lengths = np.asarray(self.lengths, dtype=np.int64)
 
     def batch(self, lo: int, count: int) -> R.RecordBatch:
         """Batch view over records [lo, lo+count) (segment-relative)."""
@@ -168,7 +179,7 @@ class Llog:
                     os.remove(path)
         if self._segments:
             for seg in self._segments[:-1]:      # only the last stays active
-                seg.data = bytes(seg.data)
+                seg.seal()
             self._first = self._segments[0].first
             self._next = self._segments[-1].last + 1
         self._firsts = [seg.first for seg in self._segments]
@@ -203,9 +214,7 @@ class Llog:
             return self._segments[-1]
         # seal the active segment, roll a new one
         if self._segments:
-            # freeze to immutable bytes: batch views over a sealed
-            # segment then extract records with a single copy
-            self._segments[-1].data = bytes(self._segments[-1].data)
+            self._segments[-1].seal()
         if self._fh is not None:
             self._fh.close()
             self._fh = None

@@ -20,6 +20,8 @@ from __future__ import annotations
 from collections import defaultdict
 from typing import Dict, Iterable, List, Sequence, Set, Tuple, Union
 
+import numpy as np
+
 from . import records as R
 
 Batch = Union[R.RecordBatch, List[R.ChangelogRecord]]
@@ -65,6 +67,18 @@ class CancelCompensating:
         self._destroy_of = {d: c for c, d in self.CANCEL}
 
     def __call__(self, batch: Batch) -> Batch:
+        if isinstance(batch, R.RecordBatch):
+            # column precheck: a drop needs a destroy op (to pair with
+            # an earlier create) or >1 checkpoint write — the vast
+            # majority of batches have neither and pass through with
+            # two vectorized scans and no per-record work
+            t = batch.types_np()
+            destroys = sorted(d for _, d in self.CANCEL)
+            interesting = bool(np.isin(t, destroys).any())
+            if not interesting and self.supersede_ckpt:
+                interesting = int((t == R.CL_CKPT_WRITE).sum()) > 1
+            if not interesting:
+                return batch
         types, keys = _types(batch), _keys(batch)
         drop: Set[int] = set()
         open_by_key: Dict[tuple, List[int]] = defaultdict(list)
@@ -97,6 +111,12 @@ class ReorderByTarget:
     processing'."""
 
     def __call__(self, batch: Batch) -> Batch:
+        if isinstance(batch, R.RecordBatch):
+            seq, oid, ver = batch.tfid_cols()
+            order = np.lexsort((batch.indices_np(), ver, oid, seq))
+            if bool((order[1:] > order[:-1]).all()):
+                return batch               # a sorted permutation is identity
+            return batch.select(order)
         keys, indices = _keys(batch), _indices(batch)
         order = sorted(range(len(keys)),
                        key=lambda i: (keys[i], indices[i]))
@@ -111,8 +131,14 @@ class TypeFilter:
 
     def __init__(self, keep: Iterable[int]):
         self.keep = set(keep)
+        self._keep_arr = np.array(sorted(self.keep), dtype=np.int64)
 
     def __call__(self, batch: Batch) -> Batch:
+        if isinstance(batch, R.RecordBatch):
+            mask = np.isin(batch.types_np(), self._keep_arr)
+            if bool(mask.all()):
+                return batch
+            return batch.select(np.flatnonzero(mask))
         types = _types(batch)
         rows = [i for i, t in enumerate(types) if t in self.keep]
         if len(rows) == len(types):
@@ -125,6 +151,21 @@ class CoalesceHeartbeats:
     is level-triggered; history adds nothing downstream)."""
 
     def __call__(self, batch: Batch) -> Batch:
+        if isinstance(batch, R.RecordBatch):
+            t = batch.types_np()
+            hb = np.flatnonzero(t == R.CL_HEARTBEAT)
+            if hb.size <= 1:
+                return batch
+            host = batch.tfid_cols()[1][hb]    # oid = host id
+            # first occurrence in the reversed host column is the last
+            # heartbeat of that host in batch order
+            _, first_rev = np.unique(host[::-1], return_index=True)
+            mask = np.ones(len(batch), dtype=bool)
+            mask[hb] = False
+            mask[hb[hb.size - 1 - first_rev]] = True
+            if bool(mask.all()):
+                return batch
+            return batch.select(np.flatnonzero(mask))
         types = _types(batch)
         last: Dict[int, int] = {}
         keys = None

@@ -54,12 +54,16 @@ The core is synchronous (``pump()``) for determinism; ``LcapService``
 
 from __future__ import annotations
 
+import bisect
+import heapq
 import itertools
 import operator
 import threading
 import time
 from collections import deque
 from typing import (Callable, Deque, Dict, Iterable, List, Optional, Tuple)
+
+import numpy as np
 
 from . import records as R
 from .ack import AckTracker
@@ -113,6 +117,175 @@ class PushSource:
             self.acked = index
 
 
+class _Outbox:
+    """A consumer's delivery queue.  Entries are either single
+    ``(pid, idx, packed)`` tuples (the per-record dispatch path) or
+    whole stamped ``RecordBatch`` chunks (the columnar path) — a chunk
+    enqueues and drains in O(1) and ``fetch_batches`` hands its rows
+    out as a view, so the steady state never touches individual
+    records.  ``len()`` counts *records*, matching the old deque of
+    tuples that backpressure caps are written against."""
+
+    __slots__ = ("_q", "_n")
+
+    def __init__(self):
+        self._q: Deque = deque()
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __bool__(self) -> bool:
+        return self._n > 0
+
+    def append(self, item: Tuple[str, int, bytes]) -> None:
+        self._q.append(item)
+        self._n += 1
+
+    def append_chunk(self, pid: str, batch: R.RecordBatch,
+                     idx: np.ndarray) -> None:
+        self._q.append([pid, batch, idx, 0])   # mutable: [.., cursor]
+        self._n += len(idx)
+
+    def popleft(self) -> Tuple[str, int, bytes]:
+        q = self._q
+        e = q[0]
+        if type(e) is tuple:
+            q.popleft()
+            self._n -= 1
+            return e
+        pid, batch, idx, pos = e               # explode one chunk row
+        out = (pid, int(idx[pos]), batch.packed(pos))
+        pos += 1
+        if pos == len(idx):
+            q.popleft()
+        else:
+            e[3] = pos
+        self._n -= 1
+        return out
+
+    def pop_batches(self, max_records: int) -> List[Tuple[str,
+                                                          R.RecordBatch]]:
+        """Drain up to ``max_records`` as ``(pid, RecordBatch)`` runs.
+        Chunks pop whole (or split at the budget boundary, a view);
+        consecutive same-producer singles coalesce into one batch."""
+        out: List[Tuple[str, R.RecordBatch]] = []
+        q = self._q
+        taken = 0
+        run_pid: Optional[str] = None
+        run_bufs: Optional[List[bytes]] = None
+        while q and taken < max_records:
+            e = q[0]
+            if type(e) is tuple:
+                pid, _idx, buf = e
+                if run_pid != pid or run_bufs is None:
+                    if run_bufs:
+                        out.append((run_pid,
+                                    R.RecordBatch.from_packed(run_bufs)))
+                    run_pid, run_bufs = pid, []
+                run_bufs.append(buf)
+                q.popleft()
+                self._n -= 1
+                taken += 1
+                continue
+            if run_bufs:
+                out.append((run_pid, R.RecordBatch.from_packed(run_bufs)))
+                run_pid, run_bufs = None, None
+            pid, batch, idx, pos = e
+            avail = len(idx) - pos
+            k = min(avail, max_records - taken)
+            sub = batch if (pos == 0 and k == avail) else batch[pos:pos + k]
+            out.append((pid, sub))
+            taken += k
+            self._n -= k
+            if k == avail:
+                q.popleft()
+            else:
+                e[3] = pos + k
+        if run_bufs:
+            out.append((run_pid, R.RecordBatch.from_packed(run_bufs)))
+        return out
+
+
+class _InFlight:
+    """``(pid, idx) -> packed record`` for redelivery, stored either
+    singly (dict) or as whole original-batch chunks with an alive mask
+    so a columnar dispatch records a thousand in-flight entries in O(1)
+    and a batched commit retires them with one vectorized membership
+    test.  ``len()`` counts records (feeds ``Consumer.load``)."""
+
+    __slots__ = ("_map", "_chunks", "_nchunk")
+
+    def __init__(self):
+        self._map: Dict[Tuple[str, int], bytes] = {}
+        # [pid, batch, idx, alive mask (None == all), alive count]
+        self._chunks: List[list] = []
+        self._nchunk = 0
+
+    def __len__(self) -> int:
+        return len(self._map) + self._nchunk
+
+    def __bool__(self) -> bool:
+        return bool(self._map) or self._nchunk > 0
+
+    def __setitem__(self, key: Tuple[str, int], buf: bytes) -> None:
+        self._map[key] = buf
+
+    def add_chunk(self, pid: str, batch: R.RecordBatch,
+                  idx: np.ndarray) -> None:
+        self._chunks.append([pid, batch, idx, None, len(idx)])
+        self._nchunk += len(idx)
+
+    def discard_many(self, pid: str, arr: np.ndarray) -> None:
+        """Retire every ``(pid, i)`` for i in ``arr`` (int64 array);
+        absent indices are ignored, like ``dict.pop(..., None)``."""
+        if self._map:
+            if len(self._map) * 4 < arr.size:
+                # few singles, big ack batch: test each key against the
+                # sorted ack array instead of popping per index
+                lst = arr.tolist()
+                n = len(lst)
+                for key in [k for k in self._map if k[0] == pid]:
+                    j = bisect.bisect_left(lst, key[1])
+                    if j < n and lst[j] == key[1]:
+                        del self._map[key]
+            else:
+                pop = self._map.pop
+                for i in arr.tolist():
+                    pop((pid, i), None)
+        if not self._nchunk:
+            return
+        kept = []
+        removed = 0
+        for ch in self._chunks:
+            if ch[0] != pid:
+                kept.append(ch)
+                continue
+            hit = np.isin(ch[2], arr)
+            if ch[3] is not None:
+                hit &= ch[3]
+            nhit = int(np.count_nonzero(hit))
+            if nhit == 0:
+                kept.append(ch)
+                continue
+            removed += nhit
+            if nhit == ch[4]:
+                continue                       # chunk fully retired
+            ch[3] = ~hit if ch[3] is None else ch[3] & ~hit
+            ch[4] -= nhit
+            kept.append(ch)
+        self._chunks = kept
+        self._nchunk -= removed
+
+    def items(self):
+        yield from self._map.items()
+        for pid, batch, idx, alive, nalive in self._chunks:
+            rows = range(len(idx)) if alive is None \
+                else np.flatnonzero(alive).tolist()
+            for j in rows:
+                yield (pid, int(idx[j])), batch.packed(j)
+
+
 class Consumer:
     def __init__(self, cid: str, group: Optional[str], flags: int, mode: str,
                  types: Optional[Iterable[int]] = None,
@@ -123,9 +296,9 @@ class Consumer:
         self.mode = mode
         self.types = frozenset(types) if types is not None else None
         self.name = name                     # durable identity within group
-        self.outbox: Deque[Tuple[str, int, bytes]] = deque()
+        self.outbox = _Outbox()
         # (producer, index) -> packed record, for redelivery
-        self.in_flight: Dict[Tuple[str, int], bytes] = {}
+        self.in_flight = _InFlight()
         self.acked_hi: Dict[str, int] = {}   # pid -> highest acked index
         self.alive = True
         self.delivered = 0
@@ -605,6 +778,105 @@ class LcapProxy:
         return any(len(m.outbox) >= cap
                    for m in grp.members.values() if m.alive)
 
+    @staticmethod
+    def _spread(loads: List[int], k: int) -> List[int]:
+        """How many of ``k`` records each member takes when every record
+        goes to the currently least-loaded member.  Matches the scalar
+        loop exactly: each assignment raises that member's load by 2
+        (outbox + in_flight), ties break on list position."""
+        if len(loads) == 1:
+            return [k]
+        heap = [(l, j) for j, l in enumerate(loads)]
+        heapq.heapify(heap)
+        counts = [0] * len(loads)
+        for _ in range(k):
+            l, j = heap[0]
+            counts[j] += 1
+            heapq.heapreplace(heap, (l + 2, j))
+        return counts
+
+    def _fast_eligible(self, groups, ephemerals, states_sat, total: int,
+                       done: int) -> bool:
+        """Whole-batch columnar dispatch preserves the scalar loop's
+        observable behavior only when nothing can interrupt the batch:
+        no quantum boundary, no group without live members or with a
+        parked backlog, and enough outbox headroom that not even the
+        most loaded member could hit the cap mid-batch."""
+        q = self.dispatch_quantum
+        if q is not None and done + total > q:
+            return False
+        cap = self.outbox_cap
+        for g in groups:
+            if states_sat[g.name] or g.pending:
+                return False
+            live_out = [len(m.outbox) for m in g.members.values() if m.alive]
+            if not live_out or max(live_out) + total >= cap:
+                return False
+        return all(len(c.outbox) + total <= cap for c in ephemerals)
+
+    def _dispatch_batch(self, pid: str, batch: R.RecordBatch,
+                        groups, ephemerals) -> Tuple[int, int]:
+        """Columnar whole-batch dispatch (the hot path): one header
+        decode, one bulk tracker delivery per group, boolean-mask type
+        pushdown, water-fill assignment, and O(1) chunk handoff to each
+        chosen member.  Returns (dispatched, filtered_out)."""
+        total = len(batch)
+        idx = batch.indices_np().astype(np.int64)
+        types: Optional[np.ndarray] = None
+        dispatched = 0
+        filtered_out = 0
+        all_rows = np.arange(total)
+        for g in groups:
+            live = [m for m in g.members.values() if m.alive]
+            tracker = g.tracker(pid)
+            tracker.deliver_many(idx)
+            if any(m.types is not None for m in live):
+                if types is None:
+                    types = batch.types_np()
+                # rows partition by *eligible member set*: one water-fill
+                # per distinct set, never per record
+                classes: Dict[tuple, List[int]] = {}
+                for t in np.unique(types).tolist():
+                    want = tuple(m.cid for m in live if m.wants(t))
+                    classes.setdefault(want, []).append(t)
+                parts = []
+                for want, ts in classes.items():
+                    rows = np.flatnonzero(np.isin(types, ts))
+                    members = [m for m in live if m.cid in set(want)]
+                    parts.append((members, rows))
+            else:
+                parts = [(live, all_rows)]
+            for members, rows in parts:
+                if not members:              # pushdown: nobody asked
+                    tracker.ack_many(idx[rows])
+                    filtered_out += len(rows)
+                    continue
+                counts = self._spread([m.load for m in members], len(rows))
+                lo = 0
+                for m, cnt in zip(members, counts):
+                    if not cnt:
+                        continue
+                    sel = rows[lo:lo + cnt]
+                    lo += cnt
+                    sub = batch if len(sel) == total else batch.select(sel)
+                    m.outbox.append_chunk(pid, sub.project(m.flags),
+                                          idx[sel])
+                    m.in_flight.add_chunk(pid, sub, idx[sel])
+                    m.delivered += cnt
+                    dispatched += cnt
+        for c in ephemerals:
+            mask = idx > c.since.get(pid, -1)   # type: ignore[attr-defined]
+            if c.types is not None:
+                if types is None:
+                    types = batch.types_np()
+                mask &= np.isin(types, sorted(c.types))
+            rows = np.flatnonzero(mask)
+            if not rows.size:
+                continue
+            sub = batch if rows.size == total else batch.select(rows)
+            c.outbox.append_chunk(pid, sub.project(c.flags), idx[rows])
+        return dispatched, filtered_out
+
     def _dispatch(self) -> int:
         n = 0
         cap = self.outbox_cap
@@ -647,6 +919,15 @@ class LcapProxy:
         while self._buffer:
             pid, batch = self._buffer.popleft()
             self._buffered -= len(batch)
+            if self._fast_eligible(groups, ephemerals, states_sat,
+                                   len(batch), n):
+                d, f = self._dispatch_batch(pid, batch, groups, ephemerals)
+                dispatched += d
+                filtered_out += f
+                n += len(batch)
+                if quantum is not None and n >= quantum:
+                    break
+                continue
             # per-(batch, group) state — membership cannot change while
             # the proxy lock is held: [group, tracker, live members,
             # pushdown active, rtype -> eligible-members cache,
@@ -781,7 +1062,7 @@ class LcapProxy:
         buf_lo: Dict[str, int] = {}
         for pid, batch in self._buffer:
             if len(batch):
-                lo = min(batch.indices())
+                lo = int(batch.indices_np().min())
                 if lo < buf_lo.get(pid, lo + 1):
                     buf_lo[pid] = lo
         for pid, src in self.producers.items():
@@ -829,8 +1110,8 @@ class LcapProxy:
                     batch, nxt = reader.read(
                         pos, min(self.batch_size, max_records - taken))
                     nxt = max(nxt, pos + 1)          # always advance
-                    rows = [i for i in range(len(batch))
-                            if pos <= batch.packed_index(i) <= hw]
+                    bidx = batch.indices_np()
+                    rows = np.flatnonzero((bidx >= pos) & (bidx <= hw))
                     if len(rows) != len(batch):
                         batch = batch.select(rows)
                     # same pre-processing as ingest (_admit_locked): a
@@ -841,10 +1122,11 @@ class LcapProxy:
                         batch = mod(batch)
                     if not isinstance(batch, R.RecordBatch):
                         batch = R.RecordBatch.from_records(batch)
-                    rows = [i for i in range(len(batch))
-                            if cons.wants(batch.packed_type(i))]
-                    if len(rows) != len(batch):
-                        batch = batch.select(rows)
+                    if cons.types is not None:
+                        rows = np.flatnonzero(
+                            np.isin(batch.types_np(), sorted(cons.types)))
+                        if len(rows) != len(batch):
+                            batch = batch.select(rows)
                     if len(batch):
                         out.append((pid, batch.remap(cons.flags)))
                         taken += len(batch)
@@ -904,16 +1186,7 @@ class LcapProxy:
             cons = self._consumer(cid)
             if cons.replay_pos:
                 return []
-            runs: List[Tuple[str, List[bytes]]] = []
-            taken = 0
-            while cons.outbox and taken < max_records:
-                pid, idx, buf = cons.outbox.popleft()
-                if not runs or runs[-1][0] != pid:
-                    runs.append((pid, []))
-                runs[-1][1].append(buf)
-                taken += 1
-            return [(pid, R.RecordBatch.from_packed(bufs))
-                    for pid, bufs in runs]
+            return cons.outbox.pop_batches(max_records)
 
     # ---------------------------------------------------------------- ack
     def ack(self, cid: str, pid: str, index: int) -> None:
@@ -938,16 +1211,16 @@ class LcapProxy:
                 if pid not in self.producers:
                     raise UnknownProducerError(f"unknown producer {pid!r}")
             for pid, indices in acks.items():
-                indices = list(indices)
-                if not indices:
+                if not isinstance(indices, (list, tuple, np.ndarray)):
+                    indices = list(indices)
+                arr = np.sort(np.asarray(indices, dtype=np.int64))
+                if not arr.size:
                     continue
-                pop = cons.in_flight.pop
-                for index in indices:
-                    pop((pid, index), None)
-                hi = max(indices)
+                cons.in_flight.discard_many(pid, arr)
+                hi = int(arr[-1])
                 if hi > cons.acked_hi.get(pid, 0):
                     cons.acked_hi[pid] = hi
-                grp.tracker(pid).ack_many(indices)
+                grp.tracker(pid).ack_many(arr)
                 self._ack_upstream(pid)
 
     def _group_position(self, grp: Group, pid: str) -> int:

@@ -42,6 +42,7 @@ from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
                     Tuple, Union)
 
 import msgpack
+import numpy as np
 
 # ---------------------------------------------------------------------------
 # Operation types.  CL_* codes 0..13 mirror Lustre; >=32 are the training
@@ -448,46 +449,72 @@ def remap_cached(buf: bytes, target_flags: int) -> bytes:
 
 
 # ---------------------------------------------------------------------------
-# RecordBatch — the batch-native unit of flow.
+# RecordBatch — the batch-native, *columnar* unit of flow.
 #
-# A batch is a packed buffer plus an offsets/lengths table.  Header
-# fields are readable per record (and as whole columns) straight out of
-# the buffer with ``struct.unpack_from`` — no per-record object, no
-# msgpack decode — and full decode (``record(i)``) is lazy.  ``select``/
-# ``permute`` produce views sharing the underlying buffer, so stream
-# modules that drop or reorder records never copy payload bytes.
+# A batch is a packed buffer plus an offsets/lengths table (numpy int64
+# columns, built lazily from whatever sequence the caller hands in).
+# The 64-byte fixed header of every record is decoded **once per
+# batch** — a single byte gather viewed as a structured dtype — into
+# contiguous per-field columns (index, type, flags, time, tfid/pfid
+# triples).  Hot paths (dispatch masks, slot hashing, compaction folds)
+# read those arrays; the packed buffer is retained only for payload
+# passthrough, and full decode (``record(i)``) stays lazy and
+# per-record.  ``select``/``permute``/slicing produce views sharing the
+# payload buffer *and* the decoded columns, so stream modules that drop
+# or reorder records copy neither payload bytes nor header columns.
 # ---------------------------------------------------------------------------
 _U16 = struct.Struct("<H")
 _U64 = struct.Struct("<Q")
 _TFID_AT = struct.Struct("<QII")
 
+#: structured view of the 64-byte fixed header (wire layout, LE)
+HDR_DTYPE = np.dtype([
+    ("namelen", "<u2"), ("flags", "<u2"), ("type", "<u2"), ("pad", "<u2"),
+    ("index", "<u8"), ("prev", "<u8"), ("time", "<u8"),
+    ("tseq", "<u8"), ("toid", "<u4"), ("tver", "<u4"),
+    ("pseq", "<u8"), ("poid", "<u4"), ("pver", "<u4")])
+assert HDR_DTYPE.itemsize == HDR_SIZE
+
+_HDR_RANGE = np.arange(HDR_SIZE, dtype=np.int64)
+_I64 = np.int64
+
 Buffer = Union[bytes, bytearray, memoryview]
 
 
+def _as_i64(seq) -> np.ndarray:
+    if type(seq) is np.ndarray and seq.dtype == np.int64:
+        return seq
+    return np.asarray(seq, dtype=np.int64)
+
+
 class RecordBatch:
-    __slots__ = ("buf", "_off", "_len", "_recs")
+    __slots__ = ("buf", "_off", "_len", "_recs", "_hdr")
 
     def __init__(self, buf: Buffer, offsets: Sequence[int],
                  lengths: Sequence[int]):
         self.buf = buf
-        self._off = list(offsets)
-        self._len = list(lengths)
+        # kept as handed in (list for append-path callers, ndarray for
+        # views); normalized to int64 columns on first columnar use
+        self._off = offsets if isinstance(offsets, (list, np.ndarray)) \
+            else list(offsets)
+        self._len = lengths if isinstance(lengths, (list, np.ndarray)) \
+            else list(lengths)
         self._recs: Dict[int, ChangelogRecord] = {}
+        self._hdr: Optional[np.ndarray] = None   # decoded header columns
 
     # -- construction -------------------------------------------------------
     @classmethod
     def empty(cls) -> "RecordBatch":
-        return cls(b"", (), ())
+        return cls(b"", np.empty(0, _I64), np.empty(0, _I64))
 
     @classmethod
     def from_packed(cls, bufs: Iterable[bytes]) -> "RecordBatch":
-        offsets, lengths, off = [], [], 0
-        chunks = []
-        for b in bufs:
-            chunks.append(b)
-            offsets.append(off)
-            lengths.append(len(b))
-            off += len(b)
+        chunks = list(bufs)
+        n = len(chunks)
+        lengths = np.fromiter(map(len, chunks), dtype=_I64, count=n)
+        offsets = np.zeros(n, _I64)
+        if n > 1:
+            np.cumsum(lengths[:-1], out=offsets[1:])
         return cls(b"".join(chunks), offsets, lengths)
 
     @classmethod
@@ -499,7 +526,7 @@ class RecordBatch:
         return len(self._off)
 
     def __bool__(self) -> bool:
-        return bool(self._off)
+        return len(self._off) > 0
 
     def __iter__(self):
         for i in range(len(self._off)):
@@ -507,7 +534,10 @@ class RecordBatch:
 
     def __getitem__(self, i):
         if isinstance(i, slice):
-            return RecordBatch(self.buf, self._off[i], self._len[i])
+            sub = RecordBatch(self.buf, self._off[i], self._len[i])
+            if self._hdr is not None:
+                sub._hdr = self._hdr[i]
+            return sub
         return self.packed(i)
 
     def __eq__(self, other) -> bool:
@@ -522,9 +552,69 @@ class RecordBatch:
 
     @property
     def nbytes(self) -> int:
-        return sum(self._len)
+        return int(self._len_col().sum())
 
-    # -- zero-copy header accessors -----------------------------------------
+    # -- columnar core ------------------------------------------------------
+    def _off_col(self) -> np.ndarray:
+        off = self._off
+        if type(off) is not np.ndarray:
+            off = self._off = _as_i64(off)
+        return off
+
+    def _len_col(self) -> np.ndarray:
+        ln = self._len
+        if type(ln) is not np.ndarray:
+            ln = self._len = _as_i64(ln)
+        return ln
+
+    def header(self) -> np.ndarray:
+        """The decoded fixed-header table: one structured row per
+        record (``HDR_DTYPE`` fields), gathered from the packed buffer
+        in a single vectorized pass and cached.  A mutable (bytearray)
+        buffer is region-copied first — holding a numpy view of a live
+        journal segment would lock it against append resizing."""
+        h = self._hdr
+        if h is None:
+            n = len(self._off)
+            if n == 0:
+                h = np.empty(0, HDR_DTYPE)
+            else:
+                off = self._off_col()
+                buf = self.buf
+                if type(buf) is not bytes:
+                    lo = int(off.min())
+                    hi = int((off + self._len_col()).max())
+                    base = np.frombuffer(bytes(buf[lo:hi]), dtype=np.uint8)
+                    off = off - lo
+                else:
+                    base = np.frombuffer(buf, dtype=np.uint8)
+                gathered = base[off[:, None] + _HDR_RANGE]
+                h = gathered.view(HDR_DTYPE).reshape(n)
+            self._hdr = h
+        return h
+
+    # numpy column accessors (the hot-path surface)
+    def indices_np(self) -> np.ndarray:          # u64 cr_index
+        return self.header()["index"]
+
+    def types_np(self) -> np.ndarray:            # u16 cr_type
+        return self.header()["type"]
+
+    def flags_np(self) -> np.ndarray:            # u16 cr_flags
+        return self.header()["flags"]
+
+    def times_np(self) -> np.ndarray:            # u64 cr_time
+        return self.header()["time"]
+
+    def tfid_cols(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        h = self.header()
+        return h["tseq"], h["toid"], h["tver"]
+
+    def pfid_cols(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        h = self.header()
+        return h["pseq"], h["poid"], h["pver"]
+
+    # -- zero-copy header accessors (per record) ----------------------------
     def packed(self, i: int) -> bytes:
         o = self._off[i]
         buf = self.buf
@@ -533,41 +623,56 @@ class RecordBatch:
         return bytes(buf[o:o + self._len[i]])    # bytearray: slice + freeze
 
     def packed_namelen(self, i: int) -> int:
+        h = self._hdr
+        if h is not None:
+            return int(h["namelen"][i])
         return _U16.unpack_from(self.buf, self._off[i])[0]
 
     def packed_flags(self, i: int) -> int:
+        h = self._hdr
+        if h is not None:
+            return int(h["flags"][i])
         return _U16.unpack_from(self.buf, self._off[i] + 2)[0]
 
     def packed_type(self, i: int) -> int:
+        h = self._hdr
+        if h is not None:
+            return int(h["type"][i])
         return _U16.unpack_from(self.buf, self._off[i] + 4)[0]
 
     def packed_index(self, i: int) -> int:
+        h = self._hdr
+        if h is not None:
+            return int(h["index"][i])
         return _U64.unpack_from(self.buf, self._off[i] + 8)[0]
 
     def packed_time(self, i: int) -> int:
+        h = self._hdr
+        if h is not None:
+            return int(h["time"][i])
         return _U64.unpack_from(self.buf, self._off[i] + 24)[0]
 
     def packed_tfid(self, i: int) -> Tuple[int, int, int]:
+        h = self._hdr
+        if h is not None:
+            return (int(h["tseq"][i]), int(h["toid"][i]), int(h["tver"][i]))
         return _TFID_AT.unpack_from(self.buf, self._off[i] + 32)
 
     packed_key = packed_tfid   # target identity == tfid triple
 
-    # -- whole columns (for batch-level stream modules) ---------------------
+    # -- whole columns, list-typed (module/test compatibility) --------------
     def types(self) -> List[int]:
-        u, buf = _U16.unpack_from, self.buf
-        return [u(buf, o + 4)[0] for o in self._off]
+        return self.types_np().tolist()
 
     def indices(self) -> List[int]:
-        u, buf = _U64.unpack_from, self.buf
-        return [u(buf, o + 8)[0] for o in self._off]
+        return self.indices_np().tolist()
 
     def flags_column(self) -> List[int]:
-        u, buf = _U16.unpack_from, self.buf
-        return [u(buf, o + 2)[0] for o in self._off]
+        return self.flags_np().tolist()
 
     def keys(self) -> List[Tuple[int, int, int]]:
-        u, buf = _TFID_AT.unpack_from, self.buf
-        return [u(buf, o + 32) for o in self._off]
+        seq, oid, ver = self.tfid_cols()
+        return list(zip(seq.tolist(), oid.tolist(), ver.tolist()))
 
     # -- lazy decode ---------------------------------------------------------
     def record(self, i: int) -> ChangelogRecord:
@@ -580,14 +685,37 @@ class RecordBatch:
         return [self.record(i) for i in range(len(self))]
 
     # -- zero-copy restructuring --------------------------------------------
-    def select(self, keep: Iterable[int]) -> "RecordBatch":
-        """View containing rows ``keep`` (in the given order), sharing
-        the payload buffer."""
-        keep = list(keep)
-        return RecordBatch(self.buf, [self._off[i] for i in keep],
-                           [self._len[i] for i in keep])
+    def select(self, keep) -> "RecordBatch":
+        """View containing rows ``keep`` (an index sequence or int
+        array, in the given order), sharing the payload buffer and any
+        already-decoded header columns."""
+        keep = _as_i64(keep)
+        sub = RecordBatch(self.buf, self._off_col()[keep],
+                          self._len_col()[keep])
+        if self._hdr is not None:
+            sub._hdr = self._hdr[keep]
+        return sub
 
     permute = select
+
+    def _compact(self) -> Tuple[bytes, np.ndarray, np.ndarray]:
+        """``(blob, offsets, lengths)`` with the records contiguous in
+        ``blob`` and offsets rebased to 0 — one range copy when the
+        rows already sit back to back (journal segment views), a
+        per-record gather otherwise (selected/permuted views)."""
+        n = len(self._off)
+        if n == 0:
+            return b"", np.empty(0, _I64), np.empty(0, _I64)
+        off, ln = self._off_col(), self._len_col()
+        if n == 1 or bool(np.all(off[1:] == off[:-1] + ln[:-1])):
+            lo, hi = int(off[0]), int(off[-1] + ln[-1])
+            buf = self.buf
+            if type(buf) is bytes and lo == 0 and hi == len(buf):
+                return buf, off, ln
+            return bytes(buf[lo:hi]), off - lo, ln
+        out = np.zeros(n, _I64)
+        np.cumsum(ln[:-1], out=out[1:])
+        return b"".join([self.packed(i) for i in range(n)]), out, ln
 
     @staticmethod
     def concat(batches: Sequence["RecordBatch"]) -> "RecordBatch":
@@ -596,31 +724,59 @@ class RecordBatch:
             return RecordBatch.empty()
         if len(batches) == 1:
             return batches[0]
-        return RecordBatch.from_packed(
-            buf for b in batches for buf in b)
+        blobs, offs, lens = [], [], []
+        base = 0
+        for b in batches:
+            blob, off, ln = b._compact()
+            blobs.append(blob)
+            offs.append(off + base if base else off)
+            lens.append(ln)
+            base += len(blob)
+        out = RecordBatch(b"".join(blobs), np.concatenate(offs),
+                          np.concatenate(lens))
+        if all(b._hdr is not None for b in batches):
+            out._hdr = np.concatenate([b._hdr for b in batches])
+        return out
 
     # -- per-batch remap (plan-cached) --------------------------------------
     def remap(self, target_flags: int) -> "RecordBatch":
         dst = target_flags & CLF_SUPPORTED
-        if all(f == dst for f in self.flags_column()):
+        fl = self.flags_np()
+        if not bool((fl != dst).any()):
             return self
         return RecordBatch.from_packed(
             remap_cached(self.packed(i), dst) for i in range(len(self)))
 
+    def project(self, target_flags: int) -> "RecordBatch":
+        """Strip-only remap: every record keeps ``src & target_flags``
+        (the proxy's §IV-A remote remap — fields the consumer did not
+        ask for are stripped, absent fields are never zero-filled).
+        Identity — no copy at all — when nothing needs stripping, which
+        is the steady state of a consumer asking for everything the
+        producers write."""
+        strip = CLF_SUPPORTED & ~target_flags
+        fl = self.flags_np()
+        if not strip or not bool((fl & strip).any()):
+            return self
+        want = target_flags & CLF_SUPPORTED
+        return RecordBatch.from_packed(
+            remap_cached(self.packed(i), int(fl[i]) & want)
+            for i in range(len(self)))
+
     # -- wire framing --------------------------------------------------------
     # u32 count | count * u32 record length | concatenated payload
     def to_wire(self) -> bytes:
-        n = len(self)
-        head = struct.pack(f"<I{n}I", n, *self._len)
-        return head + b"".join(self)
+        blob, _off, ln = self._compact()
+        return struct.pack("<I", len(self)) + \
+            ln.astype("<u4").tobytes() + blob
 
     @staticmethod
     def from_wire(blob: Buffer) -> "RecordBatch":
         (n,) = struct.unpack_from("<I", blob, 0)
-        lengths = list(struct.unpack_from(f"<{n}I", blob, 4))
-        offsets, off = [], 4 + 4 * n
-        for ln in lengths:
-            offsets.append(off)
-            off += ln
+        lengths = np.frombuffer(blob, dtype="<u4", count=n,
+                                offset=4).astype(_I64)
+        offsets = np.full(n, 4 + 4 * n, _I64)
+        if n > 1:
+            offsets[1:] += np.cumsum(lengths[:-1])
         return RecordBatch(blob if isinstance(blob, bytes) else bytes(blob),
                            offsets, lengths)

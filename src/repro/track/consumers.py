@@ -33,6 +33,8 @@ import sqlite3
 import threading
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
+import numpy as np
+
 from ..core import records as R
 from ..core.session import Subscription, connect
 
@@ -359,12 +361,16 @@ class CacheInvalidator(_GroupWorker):
         self.invalidated = 0
 
     def handle_batch(self, pid: str, batch: R.RecordBatch) -> None:
-        # type + tfid straight from the packed header — an invalidator
-        # never needs the record body.  Delivery goes through the base
-        # poll(), whose requeue-on-failure guard keeps a persistent-mode
-        # invalidator at-least-once when a handler round dies mid-way.
-        for i in range(len(batch)):
-            if batch.packed_type(i) == R.CL_EVICT:
-                _, oid, ver = batch.packed_tfid(i)
-                if self.cache.pop((oid, ver), None) is not None:
-                    self.invalidated += 1
+        # type + tfid straight from the decoded header columns — an
+        # invalidator never needs the record body.  Delivery goes
+        # through the base poll(), whose requeue-on-failure guard keeps
+        # a persistent-mode invalidator at-least-once when a handler
+        # round dies mid-way.
+        rows = np.flatnonzero(batch.types_np() == R.CL_EVICT)
+        if not rows.size:
+            return
+        _, oid, ver = batch.tfid_cols()
+        pop = self.cache.pop
+        for key in zip(oid[rows].tolist(), ver[rows].tolist()):
+            if pop(key, None) is not None:
+                self.invalidated += 1
