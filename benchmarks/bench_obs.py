@@ -1,0 +1,204 @@
+"""Observability-plane overhead: dispatch throughput with the plane on.
+
+Measures the columnar dispatch drain (the ``run_columnar`` shape from
+bench_proxy: proxy API, full-drain consumer, bulk commit/ack) twice on
+the same machine and workload:
+
+- ``baseline``: the bare pipeline, nothing watching.
+- ``observed``: the same pipeline with the whole plane attached — a
+  ``MetricsRegistry`` on the proxy (pump-latency histogram + stats
+  collectors) and an ephemeral ``ActivityAggregator`` subscription
+  receiving every record (whole-batch chunk hand-off into its outbox,
+  exactly what a live dashboard consumes).
+
+The timed section is the *dispatch path*: pump + primary-consumer
+drain.  The aggregator's own fold runs where it runs in deployment —
+on the viewer's CPU, off the pipeline's critical path — so it is
+measured separately: ``fold_records_per_sec`` over the full backlog,
+with a keep-up gate (the fold must be at least as fast as observed
+dispatch, or a live dashboard would fall behind its stream).
+
+``--smoke`` (the CI mode) fails (exit 1) when the observed dispatch
+path runs more than {MAX_OVERHEAD_PCT}% slower than the paired bare
+run, or the fold cannot keep up with dispatch.  Also reports scrape
+cost (registry snapshot + Prometheus render) as an informational side
+measurement.  Writes BENCH_obs.json (consumed by CI as an artifact).
+
+Run:  PYTHONPATH=src python benchmarks/bench_obs.py
+      PYTHONPATH=src python benchmarks/bench_obs.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import records as R                       # noqa: E402
+from repro.core.llog import Llog                          # noqa: E402
+from repro.core.proxy import LcapProxy                    # noqa: E402
+from repro.obs import (ActivityAggregator, MetricsRegistry,  # noqa: E402
+                       render_prometheus)
+
+#: smoke gate: attaching the plane may cost at most this much dispatch
+#: throughput vs the paired bare run
+MAX_OVERHEAD_PCT = 10.0
+
+FLAGS = R.CLF_JOBID | R.CLF_SHARD | R.CLF_METRICS
+T0 = 1_700_000_000_000_000_000
+WINDOW_NS = 1_000_000_000
+
+
+def fill_logs(n_producers: int, total_records: int):
+    per = total_records // n_producers
+    return {f"mdt{p}": Llog(f"mdt{p}") for p in range(n_producers)}, per
+
+
+def feed(logs: Dict[str, Llog], per: int) -> int:
+    """An aggregation-relevant stream: rolling 1 s windows, a few
+    jobids, per-producer shard tags, a metric value on most records."""
+    n = 0
+    for p, log in enumerate(logs.values()):
+        for i in range(per):
+            log.log(R.ChangelogRecord(
+                type=R.CL_CREATE if i % 3 else R.CL_CLOSE,
+                tfid=R.Fid(1, i, 0), pfid=R.Fid(1, 0, 0),
+                name=b"f%08d" % i, jobid=b"job-%d" % (i % 8),
+                shard=(0, p, 0, 0),
+                metrics=(float(i % 100),) if i % 2 else None,
+                time=T0 + i * 50_000))
+            n += 1
+    return n
+
+
+def run_drain(n_producers: int, total_records: int, observe: bool) -> dict:
+    logs, per = fill_logs(n_producers, total_records)
+    # same outbox headroom both runs: paired measurements must differ
+    # only in the plane being attached, and the undrained aggregator
+    # outbox must never back-pressure the timed section
+    proxy = LcapProxy(logs, batch_size=4096, outbox_cap=1 << 22)
+    cid = proxy.subscribe("bench", flags=FLAGS)
+    reg = agg = None
+    if observe:
+        reg = MetricsRegistry()
+        proxy.attach_registry(reg)
+        agg = ActivityAggregator(proxy, mode="ephemeral", flags=FLAGS,
+                                 window_ns=WINDOW_NS, retention=1 << 30)
+        reg.register_collector(agg.collector())
+    total = feed(logs, per)
+
+    t0 = time.perf_counter()
+    done = 0
+    while done < total:
+        moved = proxy.pump()
+        while True:
+            batches = proxy.fetch_batches(cid, 1 << 30)
+            if not batches:
+                break
+            for pid, batch in batches:
+                proxy.commit(cid, {pid: batch.indices()})
+                done += len(batch)
+        if not moved:
+            proxy.flush_upstream()
+    elapsed = time.perf_counter() - t0
+
+    assert all(log.first_index == log.last_index + 1 for log in logs.values())
+    out = {"records": total, "seconds": elapsed,
+           "records_per_sec": total / elapsed}
+    if observe:
+        # the viewer's side of the plane, off the dispatch path: fold
+        # the full backlog and time it — the keep-up rate
+        t1 = time.perf_counter()
+        folded = agg.run_once(1 << 30)
+        fold_secs = time.perf_counter() - t1
+        assert folded == total and agg.stats["records"] == total, \
+            f"aggregator saw {agg.stats['records']}/{total}"
+        assert proxy.stats["ephemeral_drops"] == 0
+        out["fold_records_per_sec"] = folded / fold_secs
+        out["windows_folded"] = len(agg.window_ids())
+        t2 = time.perf_counter()
+        text = render_prometheus(reg.snapshot())
+        out["scrape_seconds"] = time.perf_counter() - t2
+        out["scrape_bytes"] = len(text)
+    return out
+
+
+def measure(n_producers: int, total_records: int) -> dict:
+    base = run_drain(n_producers, total_records, observe=False)
+    obs = run_drain(n_producers, total_records, observe=True)
+    overhead = (1.0 - obs["records_per_sec"] / base["records_per_sec"]) * 100
+    return {"baseline": base, "observed": obs,
+            "overhead_pct": round(overhead, 2),
+            "fold_keeps_up": bool(obs["fold_records_per_sec"]
+                                  >= obs["records_per_sec"])}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__.format(MAX_OVERHEAD_PCT=MAX_OVERHEAD_PCT))
+    ap.add_argument("--records", type=int, default=64_000,
+                    help="total records per topology")
+    ap.add_argument("--producers", type=int, nargs="+", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI workload; exit 1 if the observed "
+                         f"dispatch path is > {MAX_OVERHEAD_PCT}% slower "
+                         "or the fold cannot keep up")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_obs.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        args.records = min(args.records, 20_000)
+        producers = args.producers or [1, 4]
+    else:
+        producers = args.producers or [1, 4, 16]
+
+    results = {}
+    for n in producers:
+        r = measure(n, args.records)
+        if args.smoke and (r["overhead_pct"] > MAX_OVERHEAD_PCT
+                           or not r["fold_keeps_up"]):
+            # one retry: a shared CI runner can stall a single paired
+            # measurement; a real regression fails both
+            r2 = measure(n, args.records)
+            if (r2["overhead_pct"] < r["overhead_pct"]
+                    or (r2["fold_keeps_up"] and not r["fold_keeps_up"])):
+                r = r2
+        results[str(n)] = r
+        print(f"producers={n:3d}  "
+              f"bare={r['baseline']['records_per_sec']:>12,.0f} rec/s  "
+              f"observed={r['observed']['records_per_sec']:>12,.0f} rec/s  "
+              f"overhead={r['overhead_pct']:+.2f}%  "
+              f"fold={r['observed']['fold_records_per_sec']:>12,.0f} rec/s  "
+              f"scrape={r['observed']['scrape_seconds'] * 1e3:.1f}ms"
+              f"/{r['observed']['scrape_bytes']:,}B")
+
+    payload = {
+        "benchmark": "observability plane overhead on columnar dispatch",
+        "unit": "records/sec",
+        "flags": "CLF_JOBID|CLF_SHARD|CLF_METRICS",
+        "total_records": args.records,
+        "results": results,
+        "max_overhead_pct": max(r["overhead_pct"] for r in results.values()),
+        "fold_keeps_up": all(r["fold_keeps_up"] for r in results.values()),
+    }
+    with open(args.out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"wrote {os.path.abspath(args.out)}")
+    if args.smoke and payload["max_overhead_pct"] > MAX_OVERHEAD_PCT:
+        print(f"SMOKE FAIL: observability overhead "
+              f"{payload['max_overhead_pct']:.2f}% > {MAX_OVERHEAD_PCT}% — "
+              f"the plane leaked onto the hot path")
+        sys.exit(1)
+    if args.smoke and not payload["fold_keeps_up"]:
+        print("SMOKE FAIL: aggregator fold slower than dispatch — a live "
+              "dashboard would fall behind its stream")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -38,6 +38,7 @@ class AckTracker:
         self._delivered: Set[int] = set()   # membership mirror of _heap
         self._acked: Set[int] = set()       # acked but blocked by a hole
         self._watermark = start
+        self.delivered_total = 0            # cumulative, for metrics
 
     @property
     def watermark(self) -> int:
@@ -47,11 +48,18 @@ class AckTracker:
     def in_flight(self) -> int:
         return len(self._delivered)
 
+    @property
+    def acked_total(self) -> int:
+        """Cumulative indices retired (every delivery eventually acks,
+        so this is delivered_total minus what is still in flight)."""
+        return self.delivered_total - len(self._delivered)
+
     def deliver(self, index: int) -> None:
         if index <= self._watermark or index in self._acked \
                 or index in self._delivered:
             return
         self._delivered.add(index)
+        self.delivered_total += 1
         heap = self._heap
         if self._sorted and (not heap or index >= heap[-1]):
             heap.append(index)              # common case: ascending arrival
@@ -71,6 +79,7 @@ class AckTracker:
         if not new:
             return 0
         self._delivered.update(new)
+        self.delivered_total += len(new)
         heap = self._heap
         if heap:
             heap.extend(new)

@@ -192,6 +192,12 @@ class LocalShard:
     def watermarks(self) -> Dict[str, int]:
         return dict(self.proxy.upstream_acked)
 
+    def metrics(self) -> Dict[str, dict]:
+        return self.proxy.metrics_snapshot()
+
+    def lag(self) -> Dict[str, Dict[str, Dict[str, int]]]:
+        return self.proxy.lag()
+
     def pump(self) -> int:
         moved = self.proxy.pump()
         self.proxy.flush_upstream()
@@ -260,6 +266,12 @@ class RemoteShard:
         reply = self._call({"op": "watermarks"})
         self._watermarks.update(reply.get("watermarks") or {})
         return dict(self._watermarks)
+
+    def metrics(self) -> Dict[str, dict]:
+        return self._call({"op": "metrics"}).get("metrics") or {}
+
+    def lag(self) -> Dict[str, Dict[str, Dict[str, int]]]:
+        return self._call({"op": "lag"}).get("lag") or {}
 
     def pump(self) -> int:
         return 0                          # the daemon's poller dispatches
@@ -446,6 +458,101 @@ class LcapCluster:
                 log.ack(self.reader_ids[pid], horizon)
                 self.journal_acked[pid] = horizon
                 self.stats["journal_acks"] += 1
+
+    # ------------------------------------------------------- observability
+    def attach_registry(self, registry) -> None:
+        """Publish coordinator metrics into ``registry`` and attach it
+        to every in-process shard proxy (labeled by shard index).
+        Remote shards keep their own registries, read via the
+        ``metrics`` wire verb and merged by :meth:`metrics`."""
+        self._obs = registry
+        registry.register_collector(self._collect_samples)
+        for i, shard in enumerate(self.shards):
+            proxy = getattr(shard, "proxy", None)
+            if proxy is not None:
+                proxy.attach_registry(registry, {"shard": str(i)})
+
+    def _collect_samples(self):
+        with self._lock:
+            stats = dict(self.stats)
+            alive = list(self.alive)
+            owned = [0] * len(self.shards)
+            for o in self.slot_owner:
+                owned[o] += 1
+            acked = dict(self.journal_acked)
+            cursors = dict(self.cursors)
+        out = []
+        for key, v in stats.items():
+            out.append((f"lcap_cluster_{key}_total", "counter",
+                        f"cluster stats[{key}]", {}, v))
+        for i in range(len(alive)):
+            lb = {"shard": str(i)}
+            out.append(("lcap_shard_alive", "gauge",
+                        "1 while the shard serves traffic", lb,
+                        int(alive[i])))
+            out.append(("lcap_shard_slots_owned", "gauge",
+                        "routing slots currently owned", lb, owned[i]))
+        for pid in acked:
+            lb = {"producer": pid}
+            out.append(("lcap_journal_acked", "gauge",
+                        "collective journal ack watermark", lb, acked[pid]))
+            out.append(("lcap_journal_routed", "gauge",
+                        "highest journal index routed to shards", lb,
+                        cursors.get(pid, 1) - 1))
+        return out
+
+    def metrics(self) -> Dict[str, dict]:
+        """One cluster snapshot: every live shard's registry snapshot
+        merged (counters summed, gauges relabeled per shard), plus the
+        coordinator's own registry when attached.
+
+        In-process shards share the coordinator registry, so their
+        samples are already shard-labeled and need no merge; remote
+        shards are polled over the wire."""
+        with self._lock:
+            own = getattr(self, "_obs", None)
+            per_shard = {}
+            for i, shard in enumerate(self.shards):
+                if not self.alive[i]:
+                    continue
+                proxy = getattr(shard, "proxy", None)
+                if proxy is not None and proxy._obs is own:
+                    continue     # shares the coordinator registry (or none)
+                snap = self._shard_call(i, shard.metrics)
+                if snap:
+                    per_shard[str(i)] = snap
+            from repro.obs.registry import merge_snapshots
+            merged = merge_snapshots(per_shard) if per_shard else {}
+            if own is not None:
+                for name, ent in own.snapshot().items():
+                    merged[name] = ent
+            return merged
+
+    def lag(self) -> Dict[str, Dict[str, Dict[str, int]]]:
+        """Consumer lag per (group, producer), aggregated over live
+        shards: lags sum (each shard's lag is its own re-routed share),
+        ``dispatch_hw`` takes the furthest shard, ``ack`` the slowest.
+        Dead shards are excluded — after a kill, lag is reported
+        against the survivors' watermarks only."""
+        with self._lock:
+            out: Dict[str, Dict[str, Dict[str, int]]] = {}
+            for i, shard in enumerate(self.shards):
+                if not self.alive[i]:
+                    continue
+                shard_lag = self._shard_call(i, shard.lag)
+                for gname, pids in (shard_lag or {}).items():
+                    gout = out.setdefault(gname, {})
+                    for pid, ent in pids.items():
+                        cur = gout.get(pid)
+                        if cur is None:
+                            gout[pid] = dict(ent)
+                        else:
+                            cur["lag"] += ent["lag"]
+                            cur["in_flight"] += ent["in_flight"]
+                            cur["dispatch_hw"] = max(cur["dispatch_hw"],
+                                                     ent["dispatch_hw"])
+                            cur["ack"] = min(cur["ack"], ent["ack"])
+            return out
 
     # ------------------------------------------------------------ failover
     def kill_shard(self, index: int, reason: str = "killed") -> None:

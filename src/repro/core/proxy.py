@@ -370,6 +370,10 @@ class LcapProxy:
                       "filtered_out": 0, "parked": 0, "resumed": 0,
                       "resume_replayed": 0, "parks_expired": 0,
                       "replayed": 0}
+        # observability plane (attach_registry): None until attached, so
+        # the hot path pays a single identity check when unused
+        self._obs = None
+        self._obs_pump_hist = None
 
     def _register_producer(self, pid: str, log: Llog) -> None:
         """Register with ``log`` as the lcap reader and position the
@@ -1026,6 +1030,8 @@ class LcapProxy:
 
     def pump(self) -> int:
         """One synchronous ingest+dispatch cycle; returns records moved."""
+        hist = self._obs_pump_hist
+        t0 = time.monotonic() if hist is not None else 0.0
         with self._lock:
             self._expire_parked_locked()
             filtered_before = self.stats["filtered_out"]
@@ -1036,7 +1042,9 @@ class LcapProxy:
                 # collective watermark without any consumer commit —
                 # propagate, or a fully-filtered journal never trims
                 self._flush_upstream_locked()
-            return a + b
+        if hist is not None and a + b:
+            hist.observe(time.monotonic() - t0)
+        return a + b
 
     # ------------------------------------------------------------- replay
     def _replay_reader(self, src):
@@ -1250,3 +1258,107 @@ class LcapProxy:
         records (e.g. after module-dropped batches)."""
         with self._lock:
             self._flush_upstream_locked()
+
+    # ------------------------------------------------------- observability
+    def attach_registry(self, registry, labels: Optional[Dict[str, str]]
+                        = None) -> None:
+        """Publish this proxy's metrics into ``registry`` (any object
+        with the ``MetricsRegistry`` factory surface).  Everything except
+        the pump-latency histogram is exported by a pull collector read
+        at snapshot time, so the dispatch hot path pays nothing."""
+        base = dict(labels or {})
+        names = tuple(sorted(base))
+        self._obs = registry
+        self._obs_pump_hist = registry.histogram(
+            "lcap_pump_latency_seconds",
+            "latency of one ingest+dispatch pump cycle",
+            labels=names).labels(**base)
+        registry.register_collector(lambda: self._collect_samples(base))
+
+    def _collect_samples(self, base: Dict[str, str]):
+        with self._lock:
+            stats = dict(self.stats)
+            buffered = self._buffered
+            groups = [(g.name,
+                       [(pid, tr.watermark, tr.in_flight,
+                         tr.delivered_total, tr.acked_total)
+                        for pid, tr in g.trackers.items()],
+                       len(g.pending), len(g.parked))
+                      for g in self.groups.values()]
+            consumers = [(c.cid, c.group or "", c.mode, len(c.outbox),
+                          len(c.in_flight)) for c in self.consumers.values()
+                         if c.alive]
+            ingested_hw = dict(self.ingested)
+            upstream = dict(self.upstream_acked)
+        out = []
+        for key, v in stats.items():
+            out.append((f"lcap_proxy_{key}_total", "counter",
+                        f"proxy stats[{key}]", base, v))
+        out.append(("lcap_buffered_records", "gauge",
+                    "records admitted but not yet dispatched", base,
+                    buffered))
+        for pid in ingested_hw:
+            lb = dict(base, producer=pid)
+            out.append(("lcap_ingest_watermark", "gauge",
+                        "highest journal index ingested", lb,
+                        ingested_hw[pid]))
+            out.append(("lcap_upstream_acked", "gauge",
+                        "collective ack watermark sent upstream", lb,
+                        upstream.get(pid, 0)))
+        for gname, trackers, pending, parked in groups:
+            glb = dict(base, group=gname)
+            out.append(("lcap_group_pending", "gauge",
+                        "records parked by group backpressure", glb,
+                        pending))
+            out.append(("lcap_group_parked_consumers", "gauge",
+                        "durable members parked awaiting resume", glb,
+                        parked))
+            for pid, wm, infl, deliv, acked in trackers:
+                lb = dict(glb, producer=pid)
+                out.append(("lcap_ack_watermark", "gauge",
+                            "contiguous acked index per group/producer",
+                            lb, wm))
+                out.append(("lcap_ack_in_flight", "gauge",
+                            "delivered but unacknowledged records", lb,
+                            infl))
+                out.append(("lcap_ack_delivered_records_total", "counter",
+                            "records handed to the group (ack layer)", lb,
+                            deliv))
+                out.append(("lcap_ack_acked_records_total", "counter",
+                            "records acknowledged by the group (ack layer)",
+                            lb, acked))
+        for cid, gname, mode, outbox, infl in consumers:
+            lb = dict(base, consumer=cid, group=gname, mode=mode)
+            out.append(("lcap_consumer_outbox_depth", "gauge",
+                        "records staged for fetch", lb, outbox))
+            out.append(("lcap_consumer_in_flight", "gauge",
+                        "records fetched but uncommitted", lb, infl))
+        return out
+
+    def metrics_snapshot(self) -> Dict[str, dict]:
+        """Snapshot of the attached registry (``{}`` when none)."""
+        reg = self._obs
+        return reg.snapshot() if reg is not None else {}
+
+    def lag(self) -> Dict[str, Dict[str, Dict[str, int]]]:
+        """Consumer lag per (group, producer): the distance between the
+        dispatch watermark (highest journal index this proxy has
+        ingested) and the group's collective ack cursor.  Never
+        negative; exactly zero once nothing is outstanding, because the
+        group position then jumps to the ingest watermark (module-
+        dropped and filter-acked records don't hold lag up)."""
+        with self._lock:
+            out: Dict[str, Dict[str, Dict[str, int]]] = {}
+            for gname, grp in self.groups.items():
+                gout = out[gname] = {}
+                for pid in self.producers:
+                    hw = self.ingested.get(pid, 0)
+                    tr = grp.trackers.get(pid)
+                    pos = self._group_position(grp, pid)
+                    gout[pid] = {
+                        "dispatch_hw": hw,
+                        "ack": pos,
+                        "lag": max(0, hw - pos),
+                        "in_flight": tr.in_flight if tr is not None else 0,
+                    }
+            return out

@@ -614,6 +614,96 @@ class RecordBatch:
         h = self.header()
         return h["pseq"], h["poid"], h["pver"]
 
+    # -- payload-extension columns ------------------------------------------
+    # Extensions live at flag-computable offsets (wire order: RENAME,
+    # JOBID, SHARD, METRICS, XATTR — rec_offset()), so the fixed-size
+    # ones gather vectorized: per-row offset arithmetic on the flags
+    # column, one fancy index into the packed buffer, no per-record
+    # decode.  The aggregation tier folds whole batches through these.
+    def _payload_base(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(uint8 view of the packed buffer, per-record offsets into
+        it).  Mutable buffers are region-copied like ``header()``."""
+        off = self._off_col()
+        buf = self.buf
+        if type(buf) is not bytes:
+            lo = int(off.min())
+            hi = int((off + self._len_col()).max())
+            return (np.frombuffer(bytes(buf[lo:hi]), dtype=np.uint8),
+                    off - lo)
+        return np.frombuffer(buf, dtype=np.uint8), off
+
+    def _ext_off(self, flags: np.ndarray, upto: int) -> np.ndarray:
+        """Per-row offset of fixed-position extension ``upto`` relative
+        to each record's start (valid where the flag is present)."""
+        off = np.full(len(flags), HDR_SIZE, dtype=np.int64)
+        if upto == CLF_RENAME:
+            return off
+        off += (flags & CLF_RENAME).astype(np.int64) * (2 * _FID.size)
+        if upto == CLF_JOBID:
+            return off
+        off += ((flags & CLF_JOBID) >> 1).astype(np.int64) * _JOBID_LEN
+        if upto == CLF_SHARD:
+            return off
+        off += ((flags & CLF_SHARD) >> 2).astype(np.int64) * _SHARD.size
+        if upto == CLF_METRICS:
+            return off
+        raise KeyError(f"flag {upto:#x} has no fixed offset")
+
+    def jobid_col(self) -> np.ndarray:
+        """The CLF_JOBID extension as an ``(n, 32)`` uint8 matrix; rows
+        without the flag are all-zero (the empty jobid)."""
+        n = len(self)
+        out = np.zeros((n, _JOBID_LEN), dtype=np.uint8)
+        if not n:
+            return out
+        flags = self.flags_np()
+        rows = np.flatnonzero((flags & CLF_JOBID) != 0)
+        if rows.size:
+            base, off = self._payload_base()
+            jo = off[rows] + self._ext_off(flags, CLF_JOBID)[rows]
+            out[rows] = base[jo[:, None] + np.arange(_JOBID_LEN)]
+        return out
+
+    def shard_cols(self) -> Tuple[np.ndarray, np.ndarray]:
+        """The CLF_SHARD (pod, host) u16 pair as int64 columns; rows
+        without the flag read (0, 0)."""
+        n = len(self)
+        pod = np.zeros(n, dtype=np.int64)
+        host = np.zeros(n, dtype=np.int64)
+        if not n:
+            return pod, host
+        flags = self.flags_np()
+        rows = np.flatnonzero((flags & CLF_SHARD) != 0)
+        if rows.size:
+            base, off = self._payload_base()
+            so = off[rows] + self._ext_off(flags, CLF_SHARD)[rows]
+            raw = base[so[:, None] + np.arange(4)].astype(np.int64)
+            pod[rows] = raw[:, 0] | (raw[:, 1] << 8)
+            host[rows] = raw[:, 2] | (raw[:, 3] << 8)
+        return pod, host
+
+    def metric0_col(self) -> np.ndarray:
+        """The first CLF_METRICS value per record as float64 (0.0 where
+        the extension is absent or empty) — the stream's primary gauge
+        (loss / bytes / step time, by op type)."""
+        n = len(self)
+        out = np.zeros(n, dtype=np.float64)
+        if not n:
+            return out
+        flags = self.flags_np()
+        rows = np.flatnonzero((flags & CLF_METRICS) != 0)
+        if rows.size:
+            base, off = self._payload_base()
+            mo = off[rows] + self._ext_off(flags, CLF_METRICS)[rows]
+            cnt = (base[mo].astype(np.int64)
+                   | (base[mo + 1].astype(np.int64) << 8))
+            have = np.flatnonzero(cnt > 0)
+            if have.size:
+                vo = mo[have] + 2
+                raw = base[vo[:, None] + np.arange(8)]
+                out[rows[have]] = raw.view("<f8").ravel()
+        return out
+
     # -- zero-copy header accessors (per record) ----------------------------
     def packed(self, i: int) -> bytes:
         o = self._off[i]

@@ -126,6 +126,10 @@ class LcapService:
                 return {"ok": True}
             if op == "stats":
                 return {"stats": dict(self.proxy.stats)}
+            if op == "metrics":
+                return {"metrics": self.proxy.metrics_snapshot()}
+            if op == "lag":
+                return {"lag": self.proxy.lag()}
             raise SessionError(f"unknown op {op!r}")
         except Exception as exc:  # noqa: BLE001 — reported to the peer
             return {"err": f"{type(exc).__name__}: {exc}",

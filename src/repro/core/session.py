@@ -60,6 +60,12 @@ class Subscription:
     types        CL_* op-type mask; None = every operation
     auto_commit  iterate-commits-previous-batch (True) vs explicit commit()
     max_records  fetch granularity (records per fetch round)
+    zero_fill    local remap fills requested-but-absent fields with
+                 zeros (§IV-A, the default).  Columnar consumers whose
+                 gathers already read absent extensions as zeros set
+                 False: delivery becomes strip-only — identity, no
+                 per-record work, when the proxy projection already
+                 matched (the aggregation tier's hot path).
     replay       bootstrap from the compacted history tier: True = from
                  the beginning, an int = from that journal index.  The
                  stream yields history batches first, then hands off to
@@ -75,6 +81,7 @@ class Subscription:
     auto_commit: bool = True
     max_records: int = 1024
     replay: Optional[Union[bool, int]] = None
+    zero_fill: bool = True
 
     def __post_init__(self):
         if self.types is not None and not isinstance(self.types, frozenset):
@@ -123,6 +130,12 @@ class _LocalBackend:
 
     def stats(self) -> Dict:
         return dict(self.proxy.stats)
+
+    def metrics(self) -> Dict:
+        return self.proxy.metrics_snapshot()
+
+    def lag(self) -> Dict:
+        return self.proxy.lag()
 
     def close(self) -> None:
         pass
@@ -182,6 +195,12 @@ class _WireBackend:
     def stats(self) -> Dict:
         return self._call({"op": "stats"})["stats"]
 
+    def metrics(self) -> Dict:
+        return self._call({"op": "metrics"})["metrics"]
+
+    def lag(self) -> Dict:
+        return self._call({"op": "lag"})["lag"]
+
     def close(self) -> None:
         self.rpc.close()
 
@@ -224,8 +243,12 @@ class Stream:
 
     # -- delivery ------------------------------------------------------------
     def _remap(self, batch: R.RecordBatch) -> R.RecordBatch:
-        # local remap: zero-fill requested-but-absent fields (§IV-A)
-        return batch.remap(self._flags)
+        # local remap: zero-fill requested-but-absent fields (§IV-A).
+        # With zero_fill=False only over-delivered fields are stripped
+        # (columnar project; identity when the proxy already matched).
+        if self.spec.zero_fill:
+            return batch.remap(self._flags)
+        return batch.project(self._flags)
 
     def _note(self, pid: str, batch: R.RecordBatch,
               track: bool = True) -> None:
@@ -628,6 +651,51 @@ class ClusterSession:
         total["per_shard"] = per_shard
         return total
 
+    def metrics(self) -> Dict:
+        """Merged registry snapshots across live shards (counters and
+        histograms summed, gauges labeled by shard)."""
+        from repro.obs.registry import merge_snapshots
+        per_shard = {}
+        for i, sess in self._sessions:
+            if not self._shard_alive(i):
+                continue
+            try:
+                snap = sess.metrics()
+            except (ConnectionError, OSError):
+                continue
+            if snap:
+                per_shard[str(i)] = snap
+        return merge_snapshots(per_shard)
+
+    def lag(self) -> Dict:
+        """Per-(group, producer) lag aggregated over live shards: lags
+        and in-flight sum, ``dispatch_hw`` takes the furthest shard,
+        ``ack`` the slowest; per-shard views under ``"per_shard"``."""
+        per_shard: Dict[int, Dict] = {}
+        merged: Dict[str, Dict] = {}
+        for i, sess in self._sessions:
+            if not self._shard_alive(i):
+                continue
+            try:
+                shard_lag = sess.lag()
+            except (ConnectionError, OSError):
+                continue
+            per_shard[i] = shard_lag
+            for gname, pids in shard_lag.items():
+                gout = merged.setdefault(gname, {})
+                for pid, ent in pids.items():
+                    cur = gout.get(pid)
+                    if cur is None:
+                        gout[pid] = dict(ent)
+                    else:
+                        cur["lag"] += ent["lag"]
+                        cur["in_flight"] += ent["in_flight"]
+                        cur["dispatch_hw"] = max(cur["dispatch_hw"],
+                                                 ent["dispatch_hw"])
+                        cur["ack"] = min(cur["ack"], ent["ack"])
+        merged["per_shard"] = per_shard
+        return merged
+
     def close(self) -> None:
         for _i, sess in self._sessions:
             try:
@@ -679,6 +747,16 @@ class Session:
 
     def stats(self) -> Dict:
         return self._backend.stats()
+
+    def metrics(self) -> Dict:
+        """Typed metrics snapshot from the proxy's attached registry
+        (``{}`` when no registry is attached); works over the wire."""
+        return self._backend.metrics()
+
+    def lag(self) -> Dict:
+        """Per-(group, producer) consumer lag — dispatch watermark
+        minus collective ack cursor; see ``LcapProxy.lag``."""
+        return self._backend.lag()
 
     def close(self) -> None:
         try:

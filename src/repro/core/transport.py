@@ -25,10 +25,34 @@ PROTOCOL_VERSION = 1
 
 _LEN = struct.Struct("<I")
 
+#: (sent_msgs, sent_bytes, recvd_msgs, recvd_bytes) counter instruments,
+#: installed by :func:`instrument`; None keeps the framing hot path at a
+#: single identity check per message (per-frame, never per-record)
+_METRICS = None
+
+
+def instrument(registry) -> None:
+    """Publish transport frame/byte counters into a metrics registry."""
+    global _METRICS
+    msgs = registry.counter("lcap_transport_messages_total",
+                            "wire frames by direction",
+                            labels=("direction",))
+    byts = registry.counter("lcap_transport_bytes_total",
+                            "wire payload bytes (incl. length prefix)",
+                            labels=("direction",))
+    _METRICS = (msgs.labels(direction="sent"),
+                byts.labels(direction="sent"),
+                msgs.labels(direction="received"),
+                byts.labels(direction="received"))
+
 
 def send_msg(sock: socket.socket, msg: Dict[str, Any]) -> None:
     blob = msgpack.packb(msg, use_bin_type=True)
     sock.sendall(_LEN.pack(len(blob)) + blob)
+    m = _METRICS
+    if m is not None:
+        m[0].inc()
+        m[1].inc(4 + len(blob))
 
 
 def recv_msg(sock: socket.socket) -> Optional[Dict[str, Any]]:
@@ -39,6 +63,10 @@ def recv_msg(sock: socket.socket) -> Optional[Dict[str, Any]]:
     blob = _recv_exact(sock, ln)
     if blob is None:
         return None
+    m = _METRICS
+    if m is not None:
+        m[2].inc()
+        m[3].inc(4 + ln)
     return msgpack.unpackb(blob, raw=False)
 
 

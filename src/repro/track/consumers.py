@@ -51,12 +51,12 @@ class _GroupWorker:
     def __init__(self, proxy, group: str, flags: Optional[int] = None,
                  types: Optional[Iterable[int]] = None,
                  name: Optional[str] = None, mode: str = "persistent",
-                 replay=None):
+                 replay=None, zero_fill: bool = True):
         self.session = connect(proxy)
         self.stream = self.session.subscribe(Subscription(
             group=None if mode == "ephemeral" else group, mode=mode,
             flags=flags, types=types, name=name, auto_commit=False,
-            replay=replay))
+            replay=replay, zero_fill=zero_fill))
 
     @property
     def bootstrapping(self) -> bool:

@@ -1,0 +1,630 @@
+"""Observability plane: metrics registry semantics, windowed
+aggregation equivalence (vs scalar decode and vs an offline MetricsDB
+SQL aggregation of the same 4-shard run), Prometheus/Ganglia export
+validity, the metrics/lag wire verbs, consumer-lag behavior across a
+shard kill, scalar-vs-columnar dispatch stats parity, and the top
+dashboard renderer."""
+
+import re
+import sqlite3
+import urllib.request
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core import records as R
+from repro.core import transport
+from repro.core.cluster import LcapCluster
+from repro.core.llog import Llog
+from repro.core.proxy import LcapProxy
+from repro.core.server import LcapService
+from repro.core.session import Subscription, connect
+from repro.obs import (ActivityAggregator, ActivityTop, GangliaPusher,
+                       MetricsRegistry, PrometheusExporter,
+                       merge_snapshots, render_prometheus)
+from repro.track.consumers import MetricsDB
+
+T0 = 1_700_000_000_000_000_000        # stream epoch (ns)
+WIN = 1_000_000_000                   # 1 s panes
+
+
+def mk_logs(n=2):
+    return {f"mdt{i}": Llog(f"mdt{i}") for i in range(n)}
+
+
+def feed_varied(logs, n_each=60, jobs=4, with_rename=True):
+    """A deliberately messy workload: mixed op types, records with and
+    without jobid/shard/metrics, and CLF_RENAME records (which shift
+    every later extension's offset — the case the vectorized payload
+    gathers must get right)."""
+    types = [R.CL_CREATE, R.CL_CLOSE, R.CL_HEARTBEAT, R.CL_STEP_COMMIT]
+    fed = []
+    for p, (pid, log) in enumerate(sorted(logs.items())):
+        for i in range(n_each):
+            kw = {}
+            if i % 5 != 4:
+                kw["jobid"] = f"job-{i % jobs}".encode()
+            if i % 7 != 6:
+                kw["shard"] = (p, i % 3, 0, 0)
+            if i % 3 == 0:
+                kw["metrics"] = (float(i), 0.5)
+            if with_rename and i % 11 == 0:
+                kw["sfid"] = R.Fid(9, i, 0)
+                kw["spfid"] = R.Fid(9, 0, 0)
+                kw["sname"] = b"old"
+            rec = R.ChangelogRecord(
+                type=types[i % len(types)], tfid=R.Fid(1, i % 17, 0),
+                pfid=R.Fid(1, 0, 0), name=f"{pid}-{i}".encode(),
+                time=T0 + (i % 10) * WIN + (i % 10) * 1000, **kw)
+            if log.log(rec) is not None:
+                fed.append((pid, rec))
+    return fed
+
+
+def expected_fold(fed, window_ns=WIN):
+    """Offline scalar reference of the aggregator's fold."""
+    counts, vsums = Counter(), Counter()
+    for pid, rec in fed:
+        key = (rec.time // window_ns,
+               (rec.type, (rec.jobid or b"").decode(), pid,
+                rec.shard[1] if rec.shard else 0))
+        counts[key] += 1
+        vsums[key] += rec.metrics[0] if rec.metrics else 0.0
+    return counts, vsums
+
+
+def drain(proxy, agg, rounds=50):
+    for _ in range(rounds):
+        moved = proxy.pump()
+        got = agg.run_once()
+        proxy.flush_upstream()
+        if not moved and not got:
+            break
+
+
+# ===================================================================== registry
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("c_total", "a counter")
+    c.inc()
+    c.inc(4)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("g", "a gauge")
+    g.set(10)
+    g.dec(3)
+    h = reg.histogram("h_seconds", "a histogram", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(99.0)                      # above every bucket: +Inf only
+    snap = reg.snapshot()
+    assert snap["c_total"]["samples"] == [[{}, 5.0]]
+    assert snap["g"]["samples"] == [[{}, 7.0]]
+    hs = snap["h_seconds"]["samples"][0][1]
+    assert hs["buckets"] == [[0.1, 1], [1.0, 2]]     # cumulative
+    assert hs["count"] == 3 and hs["sum"] == pytest.approx(99.55)
+
+
+def test_labeled_families_cache_children_and_reject_conflicts():
+    reg = MetricsRegistry()
+    fam = reg.counter("ops_total", labels=("op",))
+    fam.labels(op="create").inc(2)
+    fam.labels(op="close").inc()
+    assert fam.labels(op="create") is fam.labels(op="create")
+    with pytest.raises(ValueError):
+        fam.labels(nope="x")
+    assert reg.counter("ops_total", labels=("op",)) is fam   # idempotent
+    with pytest.raises(ValueError):
+        reg.gauge("ops_total")                               # kind conflict
+    samples = {tuple(sorted(l.items())): v
+               for l, v in reg.snapshot()["ops_total"]["samples"]}
+    assert samples == {(("op", "create"),): 2.0, (("op", "close"),): 1.0}
+
+
+def test_snapshot_folds_in_collectors():
+    reg = MetricsRegistry()
+    reg.register_collector(
+        lambda: [("live_depth", "gauge", "depth", {"q": "a"}, 7)])
+    snap = reg.snapshot()
+    assert snap["live_depth"]["samples"] == [[{"q": "a"}, 7]]
+
+
+def test_merge_snapshots_sums_counters_and_labels_gauges():
+    a = {"n_total": {"type": "counter", "help": "", "samples": [[{}, 3]]},
+         "depth": {"type": "gauge", "help": "", "samples": [[{}, 5]]}}
+    b = {"n_total": {"type": "counter", "help": "", "samples": [[{}, 4]]},
+         "depth": {"type": "gauge", "help": "", "samples": [[{}, 9]]}}
+    merged = merge_snapshots({"0": a, "1": b})
+    assert merged["n_total"]["samples"] == [[{}, 7]]
+    by_shard = {l["shard"]: v for l, v in merged["depth"]["samples"]}
+    assert by_shard == {"0": 5, "1": 9}
+
+
+# ============================================================ payload columns
+def test_payload_columns_match_scalar_unpack():
+    logs = mk_logs(1)
+    proxy = LcapProxy(logs)                       # registers the reader
+    fed = feed_varied(logs, n_each=80)
+    batch = logs["mdt0"].read(1, 4096)
+    recs = [R.unpack(bytes(batch.packed(i))) for i in range(len(batch))]
+    assert len(recs) == len(fed)
+
+    jm = batch.jobid_col()
+    pod, host = batch.shard_cols()
+    m0 = batch.metric0_col()
+    for i, rec in enumerate(recs):
+        assert bytes(jm[i]).rstrip(b"\0") == (rec.jobid or b"")
+        assert (int(pod[i]), int(host[i])) == \
+            ((rec.shard[0], rec.shard[1]) if rec.shard else (0, 0))
+        assert m0[i] == (rec.metrics[0] if rec.metrics else 0.0)
+
+
+# ================================================================= aggregator
+def test_aggregator_matches_scalar_reference():
+    logs = mk_logs(2)
+    proxy = LcapProxy(logs)
+    agg = ActivityAggregator(proxy, window_ns=WIN, retention=64)
+    fed = feed_varied(logs, n_each=60)
+    drain(proxy, agg)
+
+    counts, vsums = expected_fold(fed)
+    got_counts, got_vsums = {}, {}
+    for w in agg.window_ids():
+        for key, (c, vs) in agg.counters(w).items():
+            got_counts[(w, key)] = c
+            got_vsums[(w, key)] = vs
+    assert got_counts == dict(counts)
+    for key in vsums:
+        assert got_vsums[key] == pytest.approx(vsums[key])
+    assert agg.stats["records"] == len(fed)
+    # the journals trimmed: the aggregator group acked everything
+    assert all(log.first_index == log.last_index + 1
+               for log in logs.values())
+
+
+def test_sliding_windows_and_top_trends():
+    logs = mk_logs(1)
+    proxy = LcapProxy(logs)
+    agg = ActivityAggregator(proxy, window_ns=WIN)
+    log = logs["mdt0"]
+    # pane 0: 2 records for job-a; pane 1: 5 for job-a, 1 for job-b
+    for win, job, n in ((0, b"a", 2), (1, b"a", 5), (1, b"b", 1)):
+        for i in range(n):
+            log.log(R.ChangelogRecord(type=R.CL_CREATE,
+                                      tfid=R.Fid(1, i, win),
+                                      name=b"f", jobid=job,
+                                      time=T0 + win * WIN + i))
+    drain(proxy, agg)
+
+    w0 = T0 // WIN
+    both = agg.sliding(2, end=w0 + 1)
+    assert both[(R.CL_CREATE, "a", "mdt0", 0)][0] == 7
+    assert both[(R.CL_CREATE, "b", "mdt0", 0)][0] == 1
+    top = agg.top("jobid", k=2, window=w0 + 1)
+    assert top[0]["label"] == "a" and top[0]["count"] == 5
+    assert top[0]["delta"] == 3          # 5 now vs 2 in the previous pane
+    assert top[0]["rate"] == pytest.approx(5.0)
+    assert top[1] == {"label": "b", "count": 1, "value_sum": 0.0,
+                      "rate": 1.0, "delta": 1}
+    assert agg.rate(w0 + 1) == pytest.approx(6.0)
+
+
+def test_ring_retention_evicts_and_counts_late_records():
+    logs = mk_logs(1)
+    proxy = LcapProxy(logs)
+    agg = ActivityAggregator(proxy, window_ns=WIN, retention=3)
+    log = logs["mdt0"]
+    for win in range(6):
+        log.log(R.ChangelogRecord(type=R.CL_CREATE, tfid=R.Fid(1, win, 0),
+                                  name=b"f", time=T0 + win * WIN))
+    drain(proxy, agg)
+    assert len(agg.window_ids()) == 3
+    assert agg.stats["windows_evicted"] == 3
+    # a straggler older than the evicted horizon is dropped, not revived
+    log.log(R.ChangelogRecord(type=R.CL_CREATE, tfid=R.Fid(1, 99, 0),
+                              name=b"late", time=T0))
+    drain(proxy, agg)
+    assert agg.stats["late_dropped"] == 1
+    assert len(agg.window_ids()) == 3
+
+
+def test_replay_bootstrap_warm_starts_the_aggregator():
+    """An aggregator started after the stream has been running bootstraps
+    its windows from the journal's retained history (replay=True) — the
+    viewer's warm-start handoff — and then tails live with no gap.
+    The journal carries a non-compacting history tier so the trimmed
+    prefix stays replayable record-for-record."""
+    from repro.core.history import HistoryStore
+    logs = {"mdt0": Llog("mdt0", history=HistoryStore(compactor=None))}
+    proxy = LcapProxy(logs)
+    first = ActivityAggregator(proxy, group="first", window_ns=WIN)
+    fed = feed_varied(logs, n_each=40, with_rename=False)
+    drain(proxy, first)
+
+    late = ActivityAggregator(proxy, group="late", window_ns=WIN,
+                              replay=True)
+    more = feed_varied(logs, n_each=10, with_rename=False)
+    drain(proxy, late)
+    counts, _ = expected_fold(fed + more)
+    got = {}
+    for w in late.window_ids():
+        for key, (c, _vs) in late.counters(w).items():
+            got[(w, key)] = c
+    assert got == dict(counts)
+
+
+# ======================================================== stats parity (sat 1)
+def run_dispatch_workload(force_scalar):
+    """One workload, two paths: the columnar whole-batch fast path vs
+    the per-record scalar loop (forced by disabling _fast_eligible).
+    Observable behavior — every stats counter and the per-group
+    delivered multisets — must be identical."""
+    logs = mk_logs(2)
+    proxy = LcapProxy(logs, batch_size=64)
+    if force_scalar:
+        proxy._fast_eligible = lambda *a, **kw: False
+    # two persistent groups (one type-masked member each + one open),
+    # a masked group nobody else overlaps, and a masked ephemeral
+    sess = connect(proxy)
+    streams = {
+        "all": sess.subscribe(Subscription(group="all", auto_commit=False)),
+        "mixed": sess.subscribe(Subscription(
+            group="mixed", types={R.CL_CREATE, R.CL_CLOSE},
+            auto_commit=False)),
+        "rare": sess.subscribe(Subscription(
+            group="rare", types={R.CL_MKDIR}, auto_commit=False)),
+        "eph": sess.subscribe(Subscription(
+            mode="ephemeral", types={R.CL_HEARTBEAT}, auto_commit=False)),
+    }
+    feed_varied(logs, n_each=50)
+    delivered = {name: Counter() for name in streams}
+    for _ in range(60):
+        moved = proxy.pump()
+        pulled = 0
+        for name, stream in streams.items():
+            for pid, batch in stream.fetch(4096):
+                delivered[name].update(
+                    (pid, int(i)) for i in batch.indices())
+                pulled += len(batch)
+            stream.commit()
+        proxy.flush_upstream()
+        if not moved and not pulled:
+            break
+    stats = dict(proxy.stats)
+    sess.close()
+    return stats, delivered
+
+
+def test_scalar_and_columnar_dispatch_stats_agree():
+    col_stats, col_seen = run_dispatch_workload(force_scalar=False)
+    sc_stats, sc_seen = run_dispatch_workload(force_scalar=True)
+    assert col_seen == sc_seen                       # same records, same homes
+    for key in ("ingested", "dispatched", "filtered_out", "ephemeral_drops",
+                "dropped_by_modules", "redelivered"):
+        assert col_stats[key] == sc_stats[key], \
+            f"stats[{key}] drifted: columnar={col_stats[key]} " \
+            f"scalar={sc_stats[key]}"
+    # record-granular cross-check: dispatched == what the persistent
+    # groups received (ephemeral hand-offs are counted separately,
+    # under ephemeral_drops when nobody polls — never in dispatched)
+    total_seen = sum(sum(c.values())
+                     for name, c in col_seen.items() if name != "eph")
+    assert col_stats["dispatched"] == total_seen
+
+
+def test_zero_fill_opt_out_skips_the_scalar_remap():
+    """A mixed-flags stream (some records lack CLF_METRICS) forces the
+    default local remap onto its per-record zero-fill path.  A columnar
+    consumer opting out (zero_fill=False) gets strip-only delivery:
+    original flags survive untouched, and when the proxy projection
+    already matched, the very same batch object — no copy at all."""
+    mask = R.CLF_JOBID | R.CLF_SHARD | R.CLF_METRICS
+    logs = mk_logs(1)
+    proxy = LcapProxy(logs)
+    sess = connect(proxy)
+    filled = sess.subscribe(Subscription(group="filled", flags=mask,
+                                         auto_commit=False))
+    raw = sess.subscribe(Subscription(group="raw", flags=mask,
+                                      auto_commit=False, zero_fill=False))
+    feed_varied(logs, n_each=20, with_rename=False)
+    proxy.pump()
+    filled_flags, raw_flags = [], []
+    for _pid, batch in filled.fetch(4096):
+        filled_flags.extend(batch.flags_np().tolist())
+    for _pid, batch in raw.fetch(4096):
+        raw_flags.extend(batch.flags_np().tolist())
+        # strip-only and nothing to strip: the unprojected wire batch
+        assert not any(f & ~mask for f in batch.flags_np().tolist())
+    assert len(filled_flags) == len(raw_flags) == 20
+    # default: every requested extension materialized on every record
+    assert all(f == mask for f in filled_flags)
+    # opt-out: records that lacked an extension still lack it
+    assert any(f != mask for f in raw_flags)
+    assert {f & mask for f in raw_flags} == set(raw_flags)
+    sess.close()
+
+
+# ============================================================== metrics / lag
+def test_proxy_lag_tracks_outstanding_and_converges():
+    logs = mk_logs(1)
+    proxy = LcapProxy(logs)
+    sess = connect(proxy)
+    stream = sess.subscribe(Subscription(group="g", auto_commit=False))
+    log = logs["mdt0"]
+    for i in range(20):
+        log.log(R.ChangelogRecord(type=R.CL_CREATE, tfid=R.Fid(1, i, 0),
+                                  name=b"f", time=T0))
+    proxy.pump()
+    lag0 = proxy.lag()["g"]["mdt0"]
+    assert lag0["dispatch_hw"] == 20 and lag0["lag"] == 20
+    fetched = stream.fetch(4096)
+    lag1 = proxy.lag()["g"]["mdt0"]
+    assert lag1["lag"] == 20 and lag1["in_flight"] == 20   # uncommitted
+    stream.requeue(fetched)
+    for _pid, _b in stream.fetch(4096):
+        pass
+    stream.commit()
+    lag2 = proxy.lag()["g"]["mdt0"]
+    assert lag2 == {"dispatch_hw": 20, "ack": 20, "lag": 0, "in_flight": 0}
+    sess.close()
+
+
+def test_metrics_and_lag_verbs_over_the_wire():
+    logs = mk_logs(1)
+    proxy = LcapProxy(logs)
+    reg = MetricsRegistry()
+    proxy.attach_registry(reg)
+    service = LcapService(proxy).start()
+    try:
+        sess = connect(service.address)
+        stream = sess.subscribe(Subscription(group="g", auto_commit=True))
+        for i in range(10):
+            logs["mdt0"].log(R.ChangelogRecord(
+                type=R.CL_CREATE, tfid=R.Fid(1, i, 0), name=b"f", time=T0))
+        seen = 0
+        for _ in range(100):
+            seen += sum(len(b) for _p, b in stream.fetch(64))
+            if seen >= 10:
+                break
+        assert seen == 10
+        remote = sess.metrics()
+        assert remote["lcap_proxy_ingested_total"]["samples"][0][1] >= 10
+        assert "lcap_pump_latency_seconds" in remote
+        lag = sess.lag()
+        assert lag["g"]["mdt0"]["lag"] >= 0
+        # stats verb still serves the raw dict
+        assert sess.stats()["ingested"] >= 10
+        sess.close()
+    finally:
+        service.stop()
+
+
+def test_transport_counters_when_instrumented():
+    reg = MetricsRegistry()
+    transport.instrument(reg)
+    try:
+        logs = mk_logs(1)
+        proxy = LcapProxy(logs)
+        service = LcapService(proxy).start()
+        try:
+            sess = connect(service.address)
+            sess.stats()
+            sess.close()
+        finally:
+            service.stop()
+        snap = reg.snapshot()
+        by_dir = {l["direction"]: v for l, v in
+                  snap["lcap_transport_messages_total"]["samples"]}
+        assert by_dir["sent"] >= 2 and by_dir["received"] >= 2
+        assert all(v > 0 for _l, v in
+                   snap["lcap_transport_bytes_total"]["samples"])
+    finally:
+        transport._METRICS = None        # don't leak into other tests
+
+
+def test_cluster_session_aggregates_metrics_and_lag():
+    logs = mk_logs(2)
+    cluster = LcapCluster(logs, n_shards=2)
+    reg = MetricsRegistry()
+    cluster.attach_registry(reg)
+    sess = connect(cluster)
+    stream = sess.subscribe(Subscription(group="g", auto_commit=False))
+    feed_varied(logs, n_each=30, with_rename=False)
+    for _ in range(50):
+        cluster.pump()
+        moved = sum(len(b) for _p, b in stream.fetch(4096))
+        stream.commit()
+        if not moved:
+            break
+    lag = sess.lag()
+    assert set(lag["per_shard"]) == {0, 1}
+    assert lag["g"]["mdt0"]["lag"] == 0
+    merged = cluster.metrics()
+    assert merged["lcap_cluster_routed_total"]["samples"][0][1] == 60
+    # per-shard gauges stayed distinguishable
+    shards = {l.get("shard") for l, _v in
+              merged["lcap_shard_alive"]["samples"]}
+    assert shards == {"0", "1"}
+    sess.close()
+
+
+# ===================================================== lag across kill (sat 3)
+def test_lag_across_shard_kill_never_negative_and_converges():
+    logs = mk_logs(2)
+    cluster = LcapCluster(logs, n_shards=3)
+    sess = connect(cluster)
+    stream = sess.subscribe(Subscription(group="g", auto_commit=False))
+    feed_varied(logs, n_each=40, with_rename=False)
+    # route + dispatch but do NOT commit: every shard holds in-flight
+    cluster.pump()
+    fetched = stream.fetch(1 << 30)
+    assert fetched
+    before = sess.lag()
+    for pids in (v for k, v in before.items() if k != "per_shard"):
+        for ent in pids.values():
+            assert ent["lag"] >= 0
+
+    cluster.kill_shard(0)
+    # the dead shard's backlog was re-offered to survivors; lag must be
+    # reported against the survivors' re-routed watermarks only
+    after = sess.lag()
+    assert set(after["per_shard"]) == {1, 2}
+    for pids in (v for k, v in after.items() if k != "per_shard"):
+        for ent in pids.values():
+            assert ent["lag"] >= 0
+    assert any(ent["lag"] > 0 for ent in after["g"].values())
+
+    # drain: fetch (redeliveries included), commit, repeat -> lag hits 0
+    stream.requeue(fetched)
+    for _ in range(80):
+        cluster.pump()
+        moved = sum(len(b) for _p, b in stream.fetch(1 << 30))
+        stream.commit()
+        final = sess.lag()
+        lags = [ent["lag"] for k, pids in final.items() if k != "per_shard"
+                for ent in pids.values()]
+        assert all(l >= 0 for l in lags)
+        if not moved and all(l == 0 for l in lags):
+            break
+    else:
+        pytest.fail(f"lag never converged to zero: {final}")
+    sess.close()
+
+
+# =================================== 4-shard equivalence vs MetricsDB (accept)
+def test_cluster_aggregator_matches_metricsdb_sql(tmp_path):
+    """Acceptance: a 4-shard cluster run with the aggregator attached
+    reports per-(op, jobid, producer, shard-host, window) counters that
+    exactly match an offline SQL aggregation (MetricsDB) of the same
+    run."""
+    logs = mk_logs(3)
+    cluster = LcapCluster(logs, n_shards=4)
+    db = str(tmp_path / "metrics.sqlite")
+    mdb = MetricsDB(cluster, db)
+    agg = ActivityAggregator(cluster, window_ns=WIN, retention=256)
+    fed = feed_varied(logs, n_each=50)
+    for _ in range(80):
+        moved = cluster.pump()
+        moved += mdb.poll(1 << 20)
+        moved += agg.run_once()
+        if not moved and all(log.first_index == log.last_index + 1
+                             for log in logs.values()):
+            break
+    assert agg.stats["records"] == len(fed)
+
+    sql = {}
+    for (t, j, p, h, w, c, vs) in mdb.query(
+            "SELECT type, jobid, producer, host, time / ? AS win, "
+            "COUNT(*), COALESCE(SUM(m0), 0) FROM events "
+            "GROUP BY type, jobid, producer, host, win", (WIN,)):
+        sql[(w, (t, j, p, h))] = (c, vs)
+    got = {}
+    for w in agg.window_ids():
+        for key, (c, vs) in agg.counters(w).items():
+            got[(w, key)] = (c, vs)
+    assert set(got) == set(sql)
+    for key in sql:
+        assert got[key][0] == sql[key][0], key
+        assert got[key][1] == pytest.approx(sql[key][1]), key
+    mdb.close()
+
+
+# ==================================================================== export
+_PROM_LINE = re.compile(
+    r"^(# (HELP|TYPE) [a-zA-Z_:][a-zA-Z0-9_:]* .*"
+    r"|[a-zA-Z_:][a-zA-Z0-9_:]*(\{[a-zA-Z_][a-zA-Z0-9_]*="
+    r"\"(?:[^\"\\]|\\.)*\"(,[a-zA-Z_][a-zA-Z0-9_]*=\"(?:[^\"\\]|\\.)*\")*\})?"
+    r" -?[0-9.eE+\-]+(inf|nan)?)$")
+
+
+def _assert_valid_exposition(text):
+    assert text.endswith("\n")
+    for line in text.rstrip("\n").split("\n"):
+        assert _PROM_LINE.match(line), f"invalid exposition line: {line!r}"
+
+
+def mk_observed_world():
+    logs = mk_logs(2)
+    proxy = LcapProxy(logs)
+    reg = MetricsRegistry()
+    proxy.attach_registry(reg)
+    agg = ActivityAggregator(proxy, window_ns=WIN)
+    reg.register_collector(agg.collector())
+    feed_varied(logs, n_each=40)
+    drain(proxy, agg)
+    return logs, proxy, reg, agg
+
+
+def test_prometheus_render_is_valid_exposition_format():
+    _logs, _proxy, reg, _agg = mk_observed_world()
+    text = render_prometheus(reg.snapshot())
+    _assert_valid_exposition(text)
+    assert "# TYPE lcap_proxy_dispatched_total counter" in text
+    assert "# TYPE lcap_pump_latency_seconds histogram" in text
+    assert 'le="+Inf"' in text
+    assert re.search(r'lcap_window_records\{[^}]*jobid="job-0"', text)
+    # label escaping
+    weird = {"m": {"type": "gauge", "help": "quote \" test",
+                   "samples": [[{"l": 'a"b\\c\nd'}, 1]]}}
+    _assert_valid_exposition(render_prometheus(weird))
+
+
+def test_prometheus_http_endpoint_serves_scrapes():
+    _logs, _proxy, reg, _agg = mk_observed_world()
+    exporter = PrometheusExporter(registry=reg).start()
+    try:
+        with urllib.request.urlopen(exporter.url, timeout=5) as resp:
+            assert resp.status == 200
+            assert resp.headers["Content-Type"].startswith("text/plain")
+            body = resp.read().decode()
+        _assert_valid_exposition(body)
+        assert "lcap_proxy_ingested_total" in body
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(
+                exporter.url.replace("/metrics", "/nope"), timeout=5)
+    finally:
+        exporter.stop()
+
+
+def test_ganglia_pusher_maps_names_like_gmond():
+    _logs, _proxy, reg, _agg = mk_observed_world()
+    pusher = GangliaPusher(registry=reg)
+    n = pusher.push()
+    assert n == len(pusher.sent) > 0
+    names = {m["name"] for m in pusher.sent}
+    assert any(name.startswith("lcap.dispatched") for name in names)
+    assert any(".count" in name for name in names)       # histogram split
+    for m in pusher.sent:
+        assert set(m) == {"name", "value", "type", "units", "group"}
+        assert m["type"] in ("counter", "gauge")
+        assert re.match(r"^[A-Za-z0-9_.\-]+$", m["name"]), m["name"]
+
+
+# ================================================================== dashboard
+def test_dashboard_renders_all_sections():
+    logs = mk_logs(2)
+    cluster = LcapCluster(logs, n_shards=2)
+    sess = connect(cluster)
+    agg = ActivityAggregator(cluster, window_ns=WIN)
+    feed_varied(logs, n_each=30, with_rename=False)
+    for _ in range(40):
+        moved = cluster.pump()
+        moved += agg.run_once()
+        if not moved:
+            break
+    # sliding=10 spans every retained pane: feed_varied's newest pane
+    # (i % 10 == 9) only carries jobid-less records (9 ≡ 4 mod 5), so a
+    # 1-pane view would legitimately show just the empty jobid
+    top = ActivityTop(agg, session=sess, cluster=cluster, k=3, sliding=10)
+    frame = top.render()
+    assert "lcap top" in frame
+    assert "BUSIEST JOBS" in frame and "job-0" in frame
+    assert "BUSIEST OPS" in frame
+    assert "CONSUMER LAG" in frame and "obs" in frame
+    assert "shard0[UP" in frame and "shard1[UP" in frame
+    snap = top.snapshot()
+    assert snap["lag"]["obs"]["mdt0"]["lag"] == 0
+    cluster.kill_shard(1)
+    assert "shard1[DOWN" in top.render()
+    sess.close()
