@@ -159,6 +159,9 @@ class ClusterReplayReader:
 class LocalShard:
     """An in-process shard: direct method calls into an ``LcapProxy``."""
 
+    #: in-process watermarks are a dict copy — never worth skipping
+    remote = False
+
     def __init__(self, proxy: LcapProxy, index: int = 0):
         self.proxy = proxy
         self.index = index
@@ -176,8 +179,7 @@ class LocalShard:
 
     def offer_many(self, offers: Sequence[Tuple[str, R.RecordBatch, int]],
                    ) -> Dict[str, int]:
-        for pid, batch, hi in offers:
-            self.proxy.offer(pid, batch, hi)
+        self.proxy.offer_many(offers)
         return self.watermarks()
 
     # in-process: "send" applies immediately, "recv" reports the result
@@ -214,16 +216,40 @@ class LocalShard:
 class RemoteShard:
     """A shard running as its own daemon, driven over the wire verbs.
 
-    Offers are *pipelined*: one flush of requests per routing round,
-    one read of replies — the coordinator never stalls a round-trip per
-    batch.  The last reply carries the shard's per-journal watermarks.
+    Offers are *deep-batched*: a whole routing round travels as one
+    ``offer_many`` call carrying v2 (column-bearing) frames, and the
+    reply piggybacks the shard's per-journal watermarks — no separate
+    watermark round-trip while traffic flows.  An old daemon (no
+    ``caps`` verb) falls back to the legacy pipelined per-batch offers
+    with v1 frames.
     """
+
+    #: offer replies piggyback watermarks — skip the separate poll
+    remote = True
 
     def __init__(self, address, index: int = 0):
         self.address = address
         self.index = index
         self.rpc = RpcClient(tuple(address))
         self._watermarks: Dict[str, int] = {}
+        self._caps: Optional[Dict] = None
+
+    def caps(self) -> Dict:
+        """Peer capabilities, probed once per connection: record-frame
+        generation (``"wire"``) and deep-batched offer support
+        (``"deep"``).  An old daemon answers the ``caps`` verb with an
+        unknown-op error reply — treated as a v1, shallow peer."""
+        c = self._caps
+        if c is None:
+            reply = self.rpc.call({"op": "caps"})
+            if reply.get("err"):
+                c = {"wire": R.WIRE_V1, "deep": False}
+            else:
+                c = {"wire": min(int(reply.get("wire", R.WIRE_V1)),
+                                 R.WIRE_V2),
+                     "deep": bool(reply.get("deep"))}
+            self._caps = c
+        return c
 
     def add_source(self, pid: str, first: int = 1) -> None:
         self._call({"op": "add_source", "pid": pid, "first": first})
@@ -246,7 +272,18 @@ class RemoteShard:
                    ) -> None:
         """Fire this shard's burst without waiting, so every shard of
         the cluster ingests its share of a routing round concurrently;
-        ``offer_recv`` drains the replies."""
+        ``offer_recv`` drains the replies.  A deep-capable peer gets
+        the whole round as one ``offer_many`` call (header columns ride
+        the v2 frames); an old peer gets pipelined per-batch offers."""
+        caps = self.caps()
+        if caps["deep"]:
+            wire = caps["wire"]
+            self.rpc.send_request(
+                {"op": "offer_many",
+                 "offers": [(pid, batch.to_wire(wire), hi)
+                            for pid, batch, hi in offers]})
+            self._inflight = 1
+            return
         self._inflight = 0
         for pid, batch, hi in offers:
             self.rpc.send_request({"op": "offer", "pid": pid,
@@ -365,10 +402,12 @@ class LcapCluster:
         owner = np.asarray(self.slot_owner)[batch_slots(batch, self.n_slots)]
         return [np.flatnonzero(owner == i) for i in range(len(self.shards))]
 
-    def _route(self) -> int:
+    def _route(self) -> Tuple[int, List[int]]:
         """One routing round: read every journal forward, partition by
-        FID slot, push one offer per (shard, journal batch) — including
-        empty ones, which carry the watermark advance."""
+        FID slot, push one deep-batched offer burst per shard —
+        including empty ones, which carry the watermark advance.
+        Returns ``(records routed, remote shards whose offer replies
+        already piggybacked their watermarks this round)``."""
         n = 0
         offers: List[List[Tuple[str, R.RecordBatch, int]]] = \
             [[] for _ in self.shards]
@@ -396,14 +435,17 @@ class LcapCluster:
                 self._shard_call(i, self.shards[i].offer_send, shard_offers)
                 if self.alive[i]:          # send did not fail the shard
                     sent.append(i)
+        covered = []
         for i in sent:
             if self.alive[i]:
                 wm = self._shard_call(i, self.shards[i].offer_recv)
                 if wm is not None:
                     self.shard_acked[i].update(wm)
+                    if getattr(self.shards[i], "remote", False):
+                        covered.append(i)
         self.stats["routed"] += n
         self.stats["routing_rounds"] += 1
-        return n
+        return n, covered
 
     def _shard_call(self, i: int, fn, *args):
         """Invoke a shard operation; a dead connection — or a shard
@@ -421,20 +463,24 @@ class LcapCluster:
         also one dispatch cycle per shard, then collective-ack
         propagation."""
         with self._lock:
-            moved = self._route()
+            moved, covered = self._route()
             if pump_shards:
                 for i, shard in enumerate(self.shards):
                     if self.alive[i]:
                         got = self._shard_call(i, shard.pump)
                         moved += got or 0
-                self._collect_watermarks()
+                self._collect_watermarks(skip=covered)
             self._ack_journals()
             return moved
 
     # ------------------------------------------------------------- acks
-    def _collect_watermarks(self) -> None:
+    def _collect_watermarks(self, skip: Sequence[int] = ()) -> None:
+        """Poll live shards for their per-journal watermarks; remote
+        shards whose offer replies already piggybacked them this round
+        (``skip``) are not re-polled — the offer path replaced the
+        separate watermark round-trip."""
         for i, shard in enumerate(self.shards):
-            if self.alive[i]:
+            if self.alive[i] and i not in skip:
                 wm = self._shard_call(i, shard.watermarks)
                 if wm is not None:
                     self.shard_acked[i].update(wm)
@@ -733,8 +779,11 @@ class LcapClusterService:
         import time
         while not self._stop.is_set():
             moved = self.cluster.pump(pump_shards=False)
-            self.cluster.collect_watermarks()
             if not moved:
+                # idle: no offer replies to piggyback watermarks on, so
+                # poll them explicitly — the collective ack converges
+                # once the consumers drain their backlog
+                self.cluster.collect_watermarks()
                 time.sleep(self.poll_interval)
 
     def start(self) -> "LcapClusterService":

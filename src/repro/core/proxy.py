@@ -55,7 +55,6 @@ The core is synchronous (``pump()``) for determinism; ``LcapService``
 from __future__ import annotations
 
 import bisect
-import heapq
 import itertools
 import operator
 import threading
@@ -449,6 +448,17 @@ class LcapProxy:
                 self._flush_upstream_locked()
             return kept
 
+    def offer_many(self, offers: Iterable[Tuple[str, R.RecordBatch,
+                                                Optional[int]]]) -> int:
+        """A whole routing round of ``(pid, batch, hi)`` offers admitted
+        under one lock acquisition — the deep-batched cluster ingest
+        path (one wire call, one lock, N batches)."""
+        admitted = 0
+        with self._lock:
+            for pid, batch, hi in offers:
+                admitted += self.offer(pid, batch, hi)
+        return admitted
+
     def subscribe(self, group: Optional[str], flags: Optional[int] = None,
                   mode: str = PERSISTENT, cid: Optional[str] = None,
                   types: Optional[Iterable[int]] = None,
@@ -787,17 +797,35 @@ class LcapProxy:
         """How many of ``k`` records each member takes when every record
         goes to the currently least-loaded member.  Matches the scalar
         loop exactly: each assignment raises that member's load by 2
-        (outbox + in_flight), ties break on list position."""
+        (outbox + in_flight), ties break on list position.
+
+        Closed form instead of simulating k heap pops: member ``j``'s
+        successive pick keys are ``loads[j], loads[j]+2, loads[j]+4,
+        ...`` and the scalar loop takes the k lexicographically
+        smallest ``(key, j)`` pairs, so counts fall out of the k-th
+        smallest key (binary search) plus position-ordered tie-breaks
+        at that key."""
         if len(loads) == 1:
             return [k]
-        heap = [(l, j) for j, l in enumerate(loads)]
-        heapq.heapify(heap)
-        counts = [0] * len(loads)
-        for _ in range(k):
-            l, j = heap[0]
-            counts[j] += 1
-            heapq.heapreplace(heap, (l + 2, j))
-        return counts
+        if not k:
+            return [0] * len(loads)
+        arr = np.asarray(loads, dtype=np.int64)
+        # smallest T with >= k pick keys valued <= T
+        lo, hi = int(arr.min()), int(arr.min()) + 2 * k
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if int(np.where(arr <= mid,
+                            (mid - arr) // 2 + 1, 0).sum()) >= k:
+                hi = mid
+            else:
+                lo = mid + 1
+        counts = np.where(arr <= lo - 1, (lo - 1 - arr) // 2 + 1, 0)
+        rem = k - int(counts.sum())
+        if rem:                       # members holding a key == T, in
+            at = np.flatnonzero(      # list position order
+                (arr <= lo) & ((lo - arr) % 2 == 0))
+            counts[at[:rem]] += 1
+        return counts.tolist()
 
     def _fast_eligible(self, groups, ephemerals, states_sat, total: int,
                        done: int) -> bool:

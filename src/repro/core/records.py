@@ -480,6 +480,13 @@ _I64 = np.int64
 
 Buffer = Union[bytes, bytearray, memoryview]
 
+#: wire frame versions (see ``RecordBatch.to_wire``)
+WIRE_V1 = 1
+WIRE_V2 = 2
+#: first word of a v2 frame; a v1 frame starts with the record count,
+#: which stays far below this in any real batch
+WIRE2_MAGIC = 0xC015FEED
+
 
 def _as_i64(seq) -> np.ndarray:
     if type(seq) is np.ndarray and seq.dtype == np.int64:
@@ -487,8 +494,26 @@ def _as_i64(seq) -> np.ndarray:
     return np.asarray(seq, dtype=np.int64)
 
 
+def _is_frozen(buf) -> bool:
+    """True for buffers that can never be resized or mutated under a
+    numpy view: bytes, or a read-only memoryview (wire receive path)."""
+    return type(buf) is bytes or (type(buf) is memoryview and buf.readonly)
+
+
+# Shared zero-fill source for the vectorized rebuild: 32 zero bytes
+# cover every fixed default (rename 32, jobid 32, shard 8, the metrics
+# count prefix 2, and the rename-tail NUL); the empty-xattr default
+# (u32 len=1 + msgpack ``{}``) follows at _ZX_OFF.
+_ZX_OFF = 32
+_ZFILL = np.frombuffer(b"\0" * _ZX_OFF + struct.pack("<I", 1)
+                       + msgpack.packb({}), dtype=np.uint8)
+_ZFILL_LEN = {CLF_RENAME: 2 * _FID.size, CLF_JOBID: _JOBID_LEN,
+              CLF_SHARD: _SHARD.size, CLF_METRICS: 2,
+              CLF_XATTR: 4 + len(msgpack.packb({}))}
+
+
 class RecordBatch:
-    __slots__ = ("buf", "_off", "_len", "_recs", "_hdr")
+    __slots__ = ("buf", "_off", "_len", "_recs", "_hdr", "_ext")
 
     def __init__(self, buf: Buffer, offsets: Sequence[int],
                  lengths: Sequence[int]):
@@ -501,6 +526,7 @@ class RecordBatch:
             else list(lengths)
         self._recs: Dict[int, ChangelogRecord] = {}
         self._hdr: Optional[np.ndarray] = None   # decoded header columns
+        self._ext = None                         # cached extension layout
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -581,7 +607,7 @@ class RecordBatch:
             else:
                 off = self._off_col()
                 buf = self.buf
-                if type(buf) is not bytes:
+                if not _is_frozen(buf):
                     lo = int(off.min())
                     hi = int((off + self._len_col()).max())
                     base = np.frombuffer(bytes(buf[lo:hi]), dtype=np.uint8)
@@ -625,7 +651,7 @@ class RecordBatch:
         it).  Mutable buffers are region-copied like ``header()``."""
         off = self._off_col()
         buf = self.buf
-        if type(buf) is not bytes:
+        if not _is_frozen(buf):
             lo = int(off.min())
             hi = int((off + self._len_col()).max())
             return (np.frombuffer(bytes(buf[lo:hi]), dtype=np.uint8),
@@ -659,8 +685,8 @@ class RecordBatch:
         flags = self.flags_np()
         rows = np.flatnonzero((flags & CLF_JOBID) != 0)
         if rows.size:
-            base, off = self._payload_base()
-            jo = off[rows] + self._ext_off(flags, CLF_JOBID)[rows]
+            base, _off, starts, _sizes, _name = self._layout()
+            jo = starts[CLF_JOBID][rows]
             out[rows] = base[jo[:, None] + np.arange(_JOBID_LEN)]
         return out
 
@@ -675,8 +701,8 @@ class RecordBatch:
         flags = self.flags_np()
         rows = np.flatnonzero((flags & CLF_SHARD) != 0)
         if rows.size:
-            base, off = self._payload_base()
-            so = off[rows] + self._ext_off(flags, CLF_SHARD)[rows]
+            base, _off, starts, _sizes, _name = self._layout()
+            so = starts[CLF_SHARD][rows]
             raw = base[so[:, None] + np.arange(4)].astype(np.int64)
             pod[rows] = raw[:, 0] | (raw[:, 1] << 8)
             host[rows] = raw[:, 2] | (raw[:, 3] << 8)
@@ -693,8 +719,8 @@ class RecordBatch:
         flags = self.flags_np()
         rows = np.flatnonzero((flags & CLF_METRICS) != 0)
         if rows.size:
-            base, off = self._payload_base()
-            mo = off[rows] + self._ext_off(flags, CLF_METRICS)[rows]
+            base, _off, starts, _sizes, _name = self._layout()
+            mo = starts[CLF_METRICS][rows]
             cnt = (base[mo].astype(np.int64)
                    | (base[mo + 1].astype(np.int64) << 8))
             have = np.flatnonzero(cnt > 0)
@@ -702,6 +728,140 @@ class RecordBatch:
                 vo = mo[have] + 2
                 raw = base[vo[:, None] + np.arange(8)]
                 out[rows[have]] = raw.view("<f8").ravel()
+        return out
+
+    def _ext_layout(self, base: np.ndarray, off: np.ndarray):
+        """Per-row absolute ``(starts, sizes)`` of every canonical
+        extension (size 0 where the flag is absent) plus the name
+        offset — one vectorized walk of the flag-gated payload, shared
+        by the variable-size gathers and the whole-batch rebuild."""
+        src = self.flags_np().astype(np.int64)
+        n = len(src)
+        cur = off + np.int64(HDR_SIZE)
+        starts: Dict[int, np.ndarray] = {}
+        sizes: Dict[int, np.ndarray] = {}
+        for flag in _FLAG_ORDER:
+            has = (src & flag) != 0
+            if flag in _FIXED_SIZES:
+                size = np.where(has, np.int64(_FIXED_SIZES[flag]), 0)
+            else:
+                size = np.zeros(n, dtype=np.int64)
+                rows = np.flatnonzero(has)
+                if rows.size:
+                    o = cur[rows]
+                    if flag == CLF_METRICS:       # u16 value count
+                        cnt = (base[o].astype(np.int64)
+                               | (base[o + 1].astype(np.int64) << 8))
+                        size[rows] = 2 + 8 * cnt
+                    else:                         # CLF_XATTR: u32 blob len
+                        bl = (base[o].astype(np.int64)
+                              | (base[o + 1].astype(np.int64) << 8)
+                              | (base[o + 2].astype(np.int64) << 16)
+                              | (base[o + 3].astype(np.int64) << 24))
+                        size[rows] = 4 + bl
+            starts[flag] = cur
+            sizes[flag] = size
+            cur = cur + size
+        return starts, sizes, cur
+
+    def _layout(self):
+        """``(base, off, starts, sizes, name_off)`` — the payload view
+        plus the extension layout, computed once per batch and cached:
+        every columnar gather on the same batch (the consumer hot path
+        touches several per delivery) shares one canonical walk.
+        Mutable buffers get the same snapshot semantics as
+        ``header()`` — records are immutable once written."""
+        lay = self._ext
+        if lay is None:
+            base, off = self._payload_base()
+            starts, sizes, name_off = self._ext_layout(base, off)
+            lay = self._ext = (base, off, starts, sizes, name_off)
+        return lay
+
+    def _names_packed(self) -> Tuple[bytes, np.ndarray, np.ndarray]:
+        """All names pulled in one ragged gather: ``(packed, lo, hi)``
+        with record i's name at ``packed[lo[i]:hi[i]]``."""
+        base, _off, _starts, _sizes, name_off = self._layout()
+        namelen = self.header()["namelen"].astype(np.int64)
+        n = len(self)
+        out = np.zeros(n, dtype=np.int64)
+        np.cumsum(namelen[:-1], out=out[1:])
+        total = int(out[-1] + namelen[-1])
+        src = np.arange(total, dtype=np.int64) \
+            + np.repeat(name_off - out, namelen)
+        return base[src].tobytes(), out, out + namelen
+
+    def name_col(self) -> List[bytes]:
+        """Per-record name bytes sliced straight out of the packed
+        buffer past the flag-gated extensions — no record decode.  All
+        names are pulled in one ragged gather, then sliced off the
+        small contiguous result (cheaper than per-row buffer views)."""
+        if not len(self):
+            return []
+        packed, lo, hi = self._names_packed()
+        return [packed[s:e] for s, e in zip(lo.tolist(), hi.tolist())]
+
+    def name_col_str(self, errors: str = "replace") -> List[str]:
+        """``name_col`` decoded to ``str``: one bulk decode plus string
+        slicing when the packed names are pure ASCII (byte offsets ==
+        char offsets, and the overwhelmingly common case), per-record
+        decode otherwise."""
+        if not len(self):
+            return []
+        packed, lo, hi = self._names_packed()
+        if packed.isascii():
+            s = packed.decode("ascii")
+            return [s[a:b] for a, b in zip(lo.tolist(), hi.tolist())]
+        return [packed[a:b].decode(errors=errors)
+                for a, b in zip(lo.tolist(), hi.tolist())]
+
+    def metrics_cols(self, k: int = 3) -> Tuple[np.ndarray, np.ndarray]:
+        """The first ``k`` CLF_METRICS values as an ``(n, k)`` float64
+        matrix plus the per-row value count (0 where the extension is
+        absent); unfilled cells read 0.0."""
+        n = len(self)
+        out = np.zeros((n, k), dtype=np.float64)
+        cnt = np.zeros(n, dtype=np.int64)
+        if not n:
+            return out, cnt
+        flags = self.flags_np()
+        rows = np.flatnonzero((flags & CLF_METRICS) != 0)
+        if rows.size:
+            base, _off, starts, _sizes, _name = self._layout()
+            mo = starts[CLF_METRICS][rows]
+            c = (base[mo].astype(np.int64)
+                 | (base[mo + 1].astype(np.int64) << 8))
+            cnt[rows] = c
+            kk = min(k, int(c.max()))
+            if kk > 0:
+                # one gather of the first kk values per row (offsets
+                # clipped to the buffer for rows with fewer values),
+                # then mask the unfilled tail in place
+                src = np.minimum(mo[:, None] + 2 + np.arange(8 * kk),
+                                 np.int64(len(base) - 1))
+                vals = base[src].view("<f8")
+                vals[np.arange(kk) >= c[:, None]] = 0.0
+                out[rows, :kk] = vals
+        return out, cnt
+
+    def xattrs_col(self) -> List[Optional[Dict[str, Any]]]:
+        """Per-row CLF_XATTR dicts (None where absent).  Only the
+        msgpack blob itself is decoded — the fixed header and the other
+        extensions are never re-parsed."""
+        n = len(self)
+        out: List[Optional[Dict[str, Any]]] = [None] * n
+        if not n:
+            return out
+        flags = self.flags_np()
+        if not bool((flags & CLF_XATTR).any()):
+            return out
+        base, _off, starts, sizes, _name = self._layout()
+        xo, xs = starts[CLF_XATTR], sizes[CLF_XATTR]
+        mem = memoryview(base)
+        unpackb = msgpack.unpackb
+        for i in np.flatnonzero(xs).tolist():
+            s = int(xo[i])
+            out[i] = unpackb(mem[s + 4:s + int(xs[i])])
         return out
 
     # -- zero-copy header accessors (per record) ----------------------------
@@ -775,6 +935,20 @@ class RecordBatch:
         return [self.record(i) for i in range(len(self))]
 
     # -- zero-copy restructuring --------------------------------------------
+    def freeze(self) -> "RecordBatch":
+        """A frozen-buffer twin of this batch (``self`` when the buffer
+        is already frozen): one compacting copy up front so every later
+        gather / ``select`` / ``to_wire`` on it — and on views derived
+        from it — sees a zero-copy ``frombuffer`` base instead of
+        re-snapshotting a mutable journal segment per call."""
+        if _is_frozen(self.buf):
+            return self
+        blob, off, ln = self._compact()
+        out = RecordBatch(blob, off, ln)
+        if self._hdr is not None:
+            out._hdr = self._hdr
+        return out
+
     def select(self, keep) -> "RecordBatch":
         """View containing rows ``keep`` (an index sequence or int
         array, in the given order), sharing the payload buffer and any
@@ -784,6 +958,15 @@ class RecordBatch:
                           self._len_col()[keep])
         if self._hdr is not None:
             sub._hdr = self._hdr[keep]
+        lay = self._ext
+        if lay is not None:
+            # the extension layout is per-row over a shared base:
+            # subset it instead of re-walking the payload per view
+            base, off, starts, sizes, name_off = lay
+            sub._ext = (base, off[keep],
+                        {f: s[keep] for f, s in starts.items()},
+                        {f: s[keep] for f, s in sizes.items()},
+                        name_off[keep])
         return sub
 
     permute = select
@@ -805,7 +988,11 @@ class RecordBatch:
             return bytes(buf[lo:hi]), off - lo, ln
         out = np.zeros(n, _I64)
         np.cumsum(ln[:-1], out=out[1:])
-        return b"".join([self.packed(i) for i in range(n)]), out, ln
+        total = int(out[-1] + ln[-1])
+        base, poff = self._payload_base()
+        # one ragged-range gather instead of a per-record slice+join
+        src = np.arange(total, dtype=_I64) + np.repeat(poff - out, ln)
+        return base[src].tobytes(), out, ln
 
     @staticmethod
     def concat(batches: Sequence["RecordBatch"]) -> "RecordBatch":
@@ -828,14 +1015,77 @@ class RecordBatch:
             out._hdr = np.concatenate([b._hdr for b in batches])
         return out
 
-    # -- per-batch remap (plan-cached) --------------------------------------
+    # -- per-batch remap (vectorized) ---------------------------------------
+    def _rebuild(self, want: np.ndarray) -> "RecordBatch":
+        """Whole-batch remap to a per-row target mask, vectorized: one
+        canonical-order layout pass, then a single ragged byte gather
+        assembles every output record (header | kept / zero-filled
+        extensions | name | rename tail).  Bit-identical to mapping
+        ``remap_cached`` over the rows, and the rebuilt batch keeps its
+        header columns (flags patched in place) with zero re-gather."""
+        n = len(self)
+        hdr = self.header()
+        src = hdr["flags"].astype(np.int64)
+        want = want.astype(np.int64) & CLF_SUPPORTED
+        base, off, starts, sizes, name_off = self._layout()
+        ln = self._len_col()
+        zbase = np.int64(len(base))
+
+        # 8 output segments per row: header, the 5 canonical
+        # extensions, name, rename tail.  Zero-filled extensions point
+        # into the shared _ZFILL block appended past the payload.
+        seg_start = np.empty((n, 8), dtype=np.int64)
+        seg_len = np.zeros((n, 8), dtype=np.int64)
+        seg_start[:, 0] = off
+        seg_len[:, 0] = HDR_SIZE
+        for col, flag in enumerate(_FLAG_ORDER, start=1):
+            has = (src & flag) != 0
+            keep = (want & flag) != 0
+            zoff = zbase + (_ZX_OFF if flag == CLF_XATTR else 0)
+            seg_start[:, col] = np.where(has, starts[flag], zoff)
+            fill = np.where(has, sizes[flag], np.int64(_ZFILL_LEN[flag]))
+            seg_len[:, col] = np.where(keep, fill, 0)
+        namelen = hdr["namelen"].astype(np.int64)
+        seg_start[:, 6] = name_off
+        seg_len[:, 6] = namelen
+        # rename tail: copy "\0" + sname when kept, a single NUL when
+        # zero-filled, nothing when stripped or absent
+        has_r = (src & CLF_RENAME) != 0
+        keep_r = (want & CLF_RENAME) != 0
+        tail = np.where(has_r, off + ln - (name_off + namelen),
+                        np.int64(1))
+        seg_start[:, 7] = np.where(has_r, name_off + namelen, zbase)
+        seg_len[:, 7] = np.where(keep_r, tail, 0)
+
+        out_len = seg_len.sum(axis=1)
+        out_off = np.zeros(n, _I64)
+        if n > 1:
+            np.cumsum(out_len[:-1], out=out_off[1:])
+        flat_start = seg_start.ravel()
+        flat_len = seg_len.ravel()
+        ends = np.cumsum(flat_len)
+        total = int(ends[-1]) if ends.size else 0
+        idx = (np.arange(total, dtype=np.int64)
+               - np.repeat(ends - flat_len, flat_len)
+               + np.repeat(flat_start, flat_len))
+        big = np.concatenate([base, _ZFILL]) if bool(
+            ((flat_start >= zbase) & (flat_len > 0)).any()) else base
+        out = big[idx]
+        fpos = out_off + 2                 # patch cr_flags (LE u16)
+        out[fpos] = (want & 0xFF).astype(np.uint8)
+        out[fpos + 1] = ((want >> 8) & 0xFF).astype(np.uint8)
+        res = RecordBatch(out.tobytes(), out_off, out_len)
+        new_hdr = hdr.copy()
+        new_hdr["flags"] = want
+        res._hdr = new_hdr
+        return res
+
     def remap(self, target_flags: int) -> "RecordBatch":
         dst = target_flags & CLF_SUPPORTED
         fl = self.flags_np()
         if not bool((fl != dst).any()):
             return self
-        return RecordBatch.from_packed(
-            remap_cached(self.packed(i), dst) for i in range(len(self)))
+        return self._rebuild(np.full(len(self), dst, dtype=np.int64))
 
     def project(self, target_flags: int) -> "RecordBatch":
         """Strip-only remap: every record keeps ``src & target_flags``
@@ -848,25 +1098,55 @@ class RecordBatch:
         fl = self.flags_np()
         if not strip or not bool((fl & strip).any()):
             return self
-        want = target_flags & CLF_SUPPORTED
-        return RecordBatch.from_packed(
-            remap_cached(self.packed(i), int(fl[i]) & want)
-            for i in range(len(self)))
+        return self._rebuild(fl.astype(np.int64) & target_flags)
 
     # -- wire framing --------------------------------------------------------
-    # u32 count | count * u32 record length | concatenated payload
-    def to_wire(self) -> bytes:
+    # v1: u32 count | count * u32 record length | concatenated payload
+    # v2: u32 WIRE2_MAGIC | u32 count | count * u32 record length
+    #     | count * 64 B header rows (HDR_DTYPE, LE) | payload
+    # A v1 count can never collide with the magic (batches are bounded
+    # far below 2^31), so ``from_wire`` sniffs the first word and
+    # accepts both frames; version negotiation only controls what a
+    # sender *emits*, so a v1-only peer never receives a v2 frame.
+    def to_wire(self, version: int = WIRE_V1) -> bytes:
+        if version >= WIRE_V2:
+            return self.to_wire2()
         blob, _off, ln = self._compact()
         return struct.pack("<I", len(self)) + \
             ln.astype("<u4").tobytes() + blob
 
+    def to_wire2(self) -> bytes:
+        """v2 frame: the decoded header table rides alongside the
+        payload, so the receiver attaches the columns as a zero-copy
+        view instead of re-gathering 64 bytes per record."""
+        blob, _off, ln = self._compact()
+        hdr = self.header()
+        return (struct.pack("<II", WIRE2_MAGIC, len(self))
+                + ln.astype("<u4").tobytes()
+                + (hdr.tobytes() if hdr.size else b"") + blob)
+
     @staticmethod
     def from_wire(blob: Buffer) -> "RecordBatch":
-        (n,) = struct.unpack_from("<I", blob, 0)
+        if type(blob) is not bytes:
+            mv = blob if type(blob) is memoryview else memoryview(blob)
+            blob = mv if mv.readonly else bytes(mv)   # zero-copy receive
+        (first,) = struct.unpack_from("<I", blob, 0)
+        if first != WIRE2_MAGIC:
+            n = first
+            lengths = np.frombuffer(blob, dtype="<u4", count=n,
+                                    offset=4).astype(_I64)
+            offsets = np.full(n, 4 + 4 * n, _I64)
+            if n > 1:
+                offsets[1:] += np.cumsum(lengths[:-1])
+            return RecordBatch(blob, offsets, lengths)
+        (n,) = struct.unpack_from("<I", blob, 4)
         lengths = np.frombuffer(blob, dtype="<u4", count=n,
-                                offset=4).astype(_I64)
-        offsets = np.full(n, 4 + 4 * n, _I64)
+                                offset=8).astype(_I64)
+        head = 8 + 4 * n
+        offsets = np.full(n, head + HDR_SIZE * n, _I64)
         if n > 1:
             offsets[1:] += np.cumsum(lengths[:-1])
-        return RecordBatch(blob if isinstance(blob, bytes) else bytes(blob),
-                           offsets, lengths)
+        out = RecordBatch(blob, offsets, lengths)
+        out._hdr = np.frombuffer(blob, dtype=HDR_DTYPE, count=n,
+                                 offset=head)
+        return out

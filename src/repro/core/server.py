@@ -36,7 +36,7 @@ from typing import Dict
 
 from .errors import SessionError
 from .proxy import LcapProxy
-from .records import RecordBatch
+from .records import RecordBatch, WIRE_V1, WIRE_V2
 from .transport import PROTOCOL_VERSION, RpcServer
 
 
@@ -71,10 +71,22 @@ class LcapService:
                     resume=True if op == "resume" else msg.get("resume"),
                     replay=msg.get("replay"))
                 session.setdefault("cids", set()).add(info["cid"])
+                # record-frame negotiation: fetch frames are emitted at
+                # the highest generation both sides speak (an old client
+                # never sends "wire" and keeps getting v1 frames)
+                wire = min(int(msg.get("wire", WIRE_V1)), WIRE_V2)
+                session["wire"] = wire
                 if self.shard_index is not None:   # cluster-aware reply
                     info = {**info, "shard": self.shard_index,
                             "shards": self.shard_count}
-                return {"v": PROTOCOL_VERSION, **info}
+                return {"v": PROTOCOL_VERSION, "wire": wire, **info}
+            if op == "caps":
+                # feature discovery for cluster peers: record-frame
+                # generation and deep-batched offer support.  An old
+                # daemon answers with an unknown-op error reply, which
+                # callers treat as "v1, shallow".
+                return {"v": PROTOCOL_VERSION, "wire": WIRE_V2,
+                        "deep": True}
             if op == "add_source":
                 self.proxy.add_source(msg["pid"], msg.get("first", 1))
                 return {"ok": True}
@@ -82,6 +94,16 @@ class LcapService:
                 admitted = self.proxy.offer(
                     msg["pid"], RecordBatch.from_wire(msg["blob"]),
                     msg.get("hi"))
+                return {"admitted": admitted,
+                        "watermarks": dict(self.proxy.upstream_acked)}
+            if op == "offer_many":
+                # deep-batched ingest: a whole routing round in one
+                # call, admitted under one proxy lock; the reply
+                # piggybacks the shard watermarks so the coordinator
+                # skips its separate watermark round-trip
+                admitted = self.proxy.offer_many(
+                    [(pid, RecordBatch.from_wire(blob), hi)
+                     for pid, blob, hi in msg["offers"]])
                 return {"admitted": admitted,
                         "watermarks": dict(self.proxy.upstream_acked)}
             if op == "watermarks":
@@ -95,16 +117,19 @@ class LcapService:
                 return {"cid": cid}
             if op == "fetch":
                 # whole batches on the wire: one (producer, frame) pair
-                # per consecutive same-producer run (u32 count + u32
-                # lengths + concatenated packed records)
+                # per consecutive same-producer run, framed at the
+                # generation negotiated on subscribe (v2 ships the
+                # header columns alongside the payload)
+                wire = session.get("wire", WIRE_V1)
                 batches = self.proxy.fetch_batches(msg["cid"],
                                                    msg.get("max", 256))
-                return {"batches": [(pid, batch.to_wire())
+                return {"batches": [(pid, batch.to_wire(wire))
                                     for pid, batch in batches]}
             if op == "fetch_replay":
+                wire = session.get("wire", WIRE_V1)
                 batches, done = self.proxy.fetch_replay(msg["cid"],
                                                         msg.get("max", 256))
-                return {"batches": [(pid, batch.to_wire())
+                return {"batches": [(pid, batch.to_wire(wire))
                                     for pid, batch in batches],
                         "done": done}
             if op == "commit":

@@ -144,6 +144,9 @@ class _LocalBackend:
 class _WireBackend:
     def __init__(self, address: Tuple[str, int]):
         self.rpc = RpcClient(address)
+        #: record-frame generation the server will emit, learned from
+        #: the subscribe/resume reply (v1 until negotiated)
+        self.wire = R.WIRE_V1
 
     def _call(self, msg: Dict[str, Any]) -> Dict[str, Any]:
         msg.setdefault("v", PROTOCOL_VERSION)
@@ -158,7 +161,12 @@ class _WireBackend:
             "group": spec.group, "name": spec.name, "mode": spec.mode,
             "flags": spec.flags, "resume": resume, "replay": spec.replay,
             "types": sorted(spec.types) if spec.types is not None else None,
+            # offer the column-bearing v2 record frame; an old server
+            # ignores the key and keeps sending v1 (from_wire sniffs
+            # the frame magic, so either way decodes transparently)
+            "wire": R.WIRE_V2,
         })
+        self.wire = int(reply.get("wire", R.WIRE_V1))
         return {"cid": reply["cid"], "resumed": reply.get("resumed", False),
                 "flags": reply.get("flags"),
                 "token": reply.get("token") or {},

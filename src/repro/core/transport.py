@@ -7,6 +7,16 @@ inside the msgpack body as whole ``RecordBatch`` wire frames (see
 ``records.RecordBatch.to_wire``) — one message moves a batch, not a
 record, so the per-message overhead (syscalls, framing, Nagle
 interactions) amortizes across the batch.
+
+Record frames come in two generations (the message envelope is the same
+either way, so ``PROTOCOL_VERSION`` stays 1): v1 carries lengths +
+packed payload; v2 additionally ships the batch's decoded header table
+so the receiver attaches the columns without re-gathering.  The frame a
+peer *emits* is negotiated — clients offer ``"wire": 2`` on subscribe
+and servers echo what they will speak; cluster coordinators probe shard
+daemons once with the ``caps`` verb.  Receivers sniff the frame magic
+and accept both generations regardless, so negotiation only protects
+old peers from frames they cannot parse.
 """
 
 from __future__ import annotations
@@ -22,6 +32,10 @@ import msgpack
 #: wire protocol generation, stamped as "v" on every client message and
 #: checked by the server — one definition for both halves
 PROTOCOL_VERSION = 1
+
+#: record-frame generations (re-exported from records for the transport
+#: surface: the "wire" negotiation key takes these values)
+from .records import WIRE_V1, WIRE_V2  # noqa: E402,F401
 
 _LEN = struct.Struct("<I")
 

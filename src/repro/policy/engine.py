@@ -193,21 +193,24 @@ class PolicyEngine:
         hi_cookie = 0
         while pos <= last:
             batch, pos = reader.read(pos, 1024)
-            for i in range(len(batch)):
-                r = batch.record(i)
-                x = r.xattr or {}
-                cookie = x.get("cookie")
+            # columnar replay: types/keys off the header columns, and
+            # only the xattr blobs themselves decoded — never a full
+            # per-record unpack
+            types = batch.types_np().tolist()
+            keys = batch.keys()
+            for i, x in enumerate(batch.xattrs_col()):
+                cookie = (x or {}).get("cookie")
                 if cookie is None:
                     continue
                 hi_cookie = max(hi_cookie, cookie)
-                if r.type == R.CL_ACTION_PURGED:
+                if types[i] == R.CL_ACTION_PURGED:
                     act = self.actions.pop(cookie, None)
                     if act is not None:
                         self._live_by_target.pop((act.key, act.rule), None)
                 else:
                     act = self.actions.get(cookie)
                     if act is None:
-                        act = Action(cookie, r.key(), x.get("rule", ""),
+                        act = Action(cookie, keys[i], x.get("rule", ""),
                                      x.get("action", ""))
                         self.actions[cookie] = act
                         self._live_by_target[(act.key, act.rule)] = cookie
