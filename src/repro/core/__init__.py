@@ -13,23 +13,25 @@ from .cluster import (LcapCluster, LcapClusterService, LocalShard,
                       RemoteShard, fid_slot)
 from .errors import (ClusterError, SessionError, SubscriptionError,
                      UnknownConsumerError, UnknownProducerError)
-from .history import Compactor, HistoryStore, JournalReplayReader
+from .history import (Compactor, HistoryStore, JournalReplayReader,
+                      StreamJanitor)
 from .llog import Llog
 from .modules import (CancelCompensating, CoalesceHeartbeats,
                       ReorderByTarget, TypeFilter)
 from .proxy import EPHEMERAL, PERSISTENT, LcapProxy
 from .reader import LocalReader, RemoteReader
 from .records import RecordBatch
+from .routing import RoutingTable
 from .server import LcapService
 from .session import (ClusterSession, FanInStream, Session, Stream,
                       Subscription, connect)
 
 __all__ = [
     "records", "RecordBatch", "AckTracker", "Llog", "LcapProxy",
-    "HistoryStore", "Compactor", "JournalReplayReader",
+    "HistoryStore", "Compactor", "JournalReplayReader", "StreamJanitor",
     "LcapService", "PERSISTENT", "EPHEMERAL",
     "LcapCluster", "LcapClusterService", "LocalShard", "RemoteShard",
-    "fid_slot",
+    "fid_slot", "RoutingTable",
     "connect", "Session", "Stream", "Subscription",
     "ClusterSession", "FanInStream",
     "SessionError", "SubscriptionError", "UnknownConsumerError",

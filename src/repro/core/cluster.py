@@ -21,13 +21,29 @@ shards behind one coordinator:
   ``PushSource.acked`` its own collective ack writes) is collected by
   the coordinator; the minimum across live shards acknowledges the real
   journal, which trims exactly as with a single proxy.
-- **shard failure**: ``kill_shard`` (called directly, or automatically
-  when a remote shard's connection dies) reassigns the dead shard's
-  slots round-robin to the survivors and re-reads its unacknowledged
-  backlog ``(acked, cursor]`` from the journals, re-offering it to the
-  new owners — at-least-once is preserved through single-shard loss
-  because the journal only ever trimmed below the dead shard's own
-  watermark.  (Records re-offered to survivors are covered by shard
+- **epoch-versioned routing**: slot ownership lives in an immutable
+  ``RoutingTable`` snapshot (routing.py).  Every topology change —
+  migration drain/commit/cancel, shard add, failover — derives a new
+  table at ``epoch + 1``; within one epoch the owner of a slot never
+  changes, and the bump is published (piggybacked on offer/fetch/caps
+  replies) before any record is offered under the new assignment, so
+  consumers re-resolve their shard fan-in instead of assuming a fixed
+  shard set.
+- **one migration invariant, two speeds**: planned rebalancing
+  (``migrate_slots`` / ``add_shard`` / ``split_shard``) and failover
+  (``kill_shard``) share the same contract — *records above a
+  per-producer handoff watermark whose slots moved are (re)offered to
+  the new owners at the next epoch*.  A **graceful** migration marks
+  slots draining, parks newly read records for them in a bounded
+  buffer, waits until every source shard's watermark reaches the
+  handoff (its in-flight share fully consumed and acknowledged), then
+  commits and hands the parked journal tail to the new owner — zero
+  loss *and* zero duplication.  A **forced** migration (shard death)
+  cannot wait: the handoff collapses to the dead shard's own last
+  watermark and the unacknowledged backlog ``(acked, cursor]`` is
+  re-read from the journals for the new owners — zero loss,
+  at-least-once (the journal never trimmed past the dead shard's own
+  watermark).  (Records re-offered to survivors are covered by shard
   memory, not the journal, until consumed: a *second* failure inside
   that window can lose them — the documented cascading-failure caveat.)
 
@@ -54,6 +70,7 @@ from .errors import ClusterError
 from .history import JournalReplayReader
 from .llog import Llog
 from .proxy import LcapProxy, PushSource
+from .routing import RoutingTable
 from .transport import RpcClient
 
 DEFAULT_SLOTS = 64
@@ -142,10 +159,14 @@ class ClusterReplayReader:
     def available_lo(self) -> int:
         return self._reader.available_lo()
 
+    @property
+    def floor_is_retention(self) -> bool:
+        return self._reader.floor_is_retention
+
     def read(self, start: int, max_records: int = 1024):
         batch, nxt = self._reader.read(start, max_records)
         if len(batch):
-            owner = np.asarray(self.cluster.slot_owner)
+            owner = self.cluster.routing.owner_array()
             mine = owner[batch_slots(batch, self.cluster.n_slots)] \
                 == self.shard_index
             if not bool(mine.all()):
@@ -327,6 +348,22 @@ class RemoteShard:
         self.rpc.close()
 
 
+class _Migration:
+    """The one in-flight graceful migration: which slots are draining,
+    where they are going, which shards must drain, and the per-producer
+    handoff watermark recorded when the drain began (the highest
+    journal index routed so far — exactly the replay-bootstrap handoff
+    convention of ``LcapProxy._arm_replay_locked``)."""
+
+    __slots__ = ("slots", "target", "sources", "handoff")
+
+    def __init__(self, slots, target, sources, handoff):
+        self.slots = frozenset(slots)
+        self.target = int(target)
+        self.sources = frozenset(sources)
+        self.handoff: Dict[str, int] = dict(handoff)
+
+
 class LcapCluster:
     """N proxy shards behind one coordinator; see the module docstring.
 
@@ -338,9 +375,11 @@ class LcapCluster:
     def __init__(self, producers: Dict[str, Llog], n_shards: int = 2,
                  shards: Optional[Sequence] = None,
                  n_slots: int = DEFAULT_SLOTS, batch_size: int = 1024,
-                 modules=None, **proxy_kwargs):
+                 modules=None, park_cap: int = 1 << 16, **proxy_kwargs):
+        self._modules = list(modules or [])
+        self._proxy_defaults = dict(proxy_kwargs)
         if shards is None:
-            shards = [LocalShard(LcapProxy({}, modules=list(modules or []),
+            shards = [LocalShard(LcapProxy({}, modules=list(self._modules),
                                            batch_size=batch_size,
                                            **proxy_kwargs), index=i)
                       for i in range(n_shards)]
@@ -351,8 +390,9 @@ class LcapCluster:
             shard.index = i
         self.n_slots = n_slots
         self.batch_size = batch_size
-        self.slot_owner: List[int] = [i % len(self.shards)
-                                      for i in range(n_slots)]
+        #: the current ownership snapshot; replaced (never mutated) on
+        #: every topology change — see routing.RoutingTable
+        self.routing = RoutingTable.initial(n_slots, len(self.shards))
         self.alive: List[bool] = [True] * len(self.shards)
         self.journals: Dict[str, Llog] = {}
         self.reader_ids: Dict[str, str] = {}
@@ -361,15 +401,39 @@ class LcapCluster:
         #: shard index -> (pid -> last known shard watermark)
         self.shard_acked: List[Dict[str, int]] = [dict() for _ in self.shards]
         self._lock = threading.RLock()
+        #: the one in-flight graceful migration (None when settled)
+        self._migration: Optional[_Migration] = None
+        #: records read for draining slots, held until the commit hands
+        #: them to the new owner: (pid, batch, hi) in journal order
+        self._parked: List[Tuple[str, R.RecordBatch, int]] = []
+        self._parked_count = 0
+        #: parking-buffer bound: when reached, the routing loop stops
+        #: reading journals (backpressure) until the migration settles
+        self.park_cap = park_cap
         self.stats = {"routed": 0, "routing_rounds": 0, "shards_failed": 0,
-                      "failover_redelivered": 0, "journal_acks": 0}
+                      "failover_redelivered": 0, "journal_acks": 0,
+                      "epoch_bumps": 0, "migrations_started": 0,
+                      "migrations_completed": 0, "migrations_cancelled": 0,
+                      "slots_migrated": 0, "parked_records": 0,
+                      "shards_added": 0}
         for pid, log in producers.items():
             self.add_producer(pid, log)
 
     # ------------------------------------------------------------ topology
+    @property
+    def slot_owner(self) -> List[int]:
+        """Read-only view of the current table's ownership; topology
+        changes go through the routing operations (migrate/add/kill)."""
+        return list(self.routing.slot_owner)
+
+    @property
+    def epoch(self) -> int:
+        """The routing table's current epoch."""
+        return self.routing.epoch
+
     def shard_of(self, key: Tuple[int, int, int]) -> int:
         """The shard currently owning target FID ``key``."""
-        return self.slot_owner[fid_slot(key, self.n_slots)]
+        return self.routing.slot_owner[fid_slot(key, self.n_slots)]
 
     @property
     def live_shards(self) -> List:
@@ -395,31 +459,56 @@ class LcapCluster:
                     self._shard_call(i, shard.set_replay_reader, pid,
                                      ClusterReplayReader(self, pid, i))
                 self.shard_acked[i].setdefault(pid, start - 1)
+            if self._migration is not None:
+                # nothing of this journal was routed before the drain
+                self._migration.handoff.setdefault(pid, start - 1)
 
     # -------------------------------------------------------------- routing
     def _partition(self, batch: R.RecordBatch) -> List[np.ndarray]:
         """Row indices per shard, in batch (= journal) order."""
-        owner = np.asarray(self.slot_owner)[batch_slots(batch, self.n_slots)]
+        owner = self.routing.owner_array()[batch_slots(batch, self.n_slots)]
         return [np.flatnonzero(owner == i) for i in range(len(self.shards))]
 
     def _route(self) -> Tuple[int, List[int]]:
         """One routing round: read every journal forward, partition by
         FID slot, push one deep-batched offer burst per shard —
         including empty ones, which carry the watermark advance.
+        Rows whose slot is draining (mid-migration) are parked instead
+        of offered; when the parking buffer is full the round stops
+        reading (backpressure) until the migration settles.
         Returns ``(records routed, remote shards whose offer replies
         already piggybacked their watermarks this round)``."""
         n = 0
         offers: List[List[Tuple[str, R.RecordBatch, int]]] = \
             [[] for _ in self.shards]
+        owner_arr = self.routing.owner_array()
+        drain = (self.routing.draining_mask()
+                 if self._migration is not None else None)
         for pid, log in self.journals.items():
             while True:
+                if drain is not None and self._parked_count >= self.park_cap:
+                    break
                 batch = log.read(self.cursors[pid], self.batch_size)
                 if not batch:
                     break
                 got = len(batch)
                 hi = batch.packed_index(got - 1)
                 self.cursors[pid] = hi + 1
-                rows = self._partition(batch)
+                slots = batch_slots(batch, self.n_slots)
+                if drain is not None and bool(drain[slots].any()):
+                    dmask = drain[slots]
+                    parked_rows = np.flatnonzero(dmask)
+                    self._parked.append((pid, batch.select(parked_rows), hi))
+                    self._parked_count += int(parked_rows.size)
+                    self.stats["parked_records"] += int(parked_rows.size)
+                    keep = np.flatnonzero(~dmask)
+                    owner = owner_arr[slots[keep]]
+                    rows = [keep[owner == i]
+                            for i in range(len(self.shards))]
+                else:
+                    owner = owner_arr[slots]
+                    rows = [np.flatnonzero(owner == i)
+                            for i in range(len(self.shards))]
                 for i, shard_rows in enumerate(rows):
                     if self.alive[i]:
                         offers[i].append((pid, batch.select(shard_rows), hi))
@@ -470,8 +559,218 @@ class LcapCluster:
                         got = self._shard_call(i, shard.pump)
                         moved += got or 0
                 self._collect_watermarks(skip=covered)
+            self._advance_migration_locked()
             self._ack_journals()
             return moved
+
+    # ------------------------------------------------ elastic operations
+    def migrate_slots(self, slots: Sequence[int], target: int) -> int:
+        """Begin a live migration of ``slots`` to shard ``target``.
+
+        The slots are marked draining at ``epoch + 1``: their current
+        owners keep dispatching what they already ingested, while the
+        routing loop parks newly read records for them.  The migration
+        commits (on a later ``pump``/``collect_watermarks``) once every
+        source shard's per-journal watermark reaches the handoff
+        recorded here — i.e. its in-flight share of the drained slots
+        is fully consumed and acknowledged — at which point ownership
+        flips at ``epoch + 2`` and the parked journal tail is offered
+        to the new owner.  No record is lost or delivered twice.
+
+        Returns the number of slots actually draining (slots already
+        owned by ``target`` are skipped).  One migration may be in
+        flight at a time."""
+        with self._lock:
+            if self._migration is not None:
+                raise ClusterError("a migration is already in flight")
+            if not (0 <= target < len(self.shards)) or not self.alive[target]:
+                raise ClusterError(f"migration target {target} is not a "
+                                   "live shard")
+            owner = self.routing.slot_owner
+            move = sorted({int(s) for s in slots})
+            if any(s < 0 or s >= self.n_slots for s in move):
+                raise ClusterError("slot out of range")
+            move = [s for s in move if owner[s] != target]
+            if not move:
+                return 0
+            sources = {owner[s] for s in move}
+            self.routing = self.routing.drain(move, target)
+            self.stats["epoch_bumps"] += 1
+            self.stats["migrations_started"] += 1
+            self._migration = _Migration(
+                slots=move, target=target, sources=sources,
+                handoff={pid: self.cursors[pid] - 1
+                         for pid in self.journals})
+            # nothing in flight on the sources → commits immediately
+            self._advance_migration_locked()
+            return len(move)
+
+    def _advance_migration_locked(self) -> None:
+        """Commit the in-flight migration once every source shard's
+        watermark shows its share of the drained slots consumed and
+        acknowledged up to the handoff."""
+        m = self._migration
+        if m is None:
+            return
+        for src in m.sources:
+            if not self.alive[src]:
+                return                    # kill_shard cancels/absorbs it
+            acked = self.shard_acked[src]
+            for pid, h in m.handoff.items():
+                if acked.get(pid, -1) < h:
+                    return
+        self._migration = None
+        self.routing = self.routing.commit_drain()
+        self.stats["epoch_bumps"] += 1
+        self.stats["migrations_completed"] += 1
+        self.stats["slots_migrated"] += len(m.slots)
+        parked, self._parked, self._parked_count = self._parked, [], 0
+        if self.alive[m.target]:
+            if parked:
+                wm = self._shard_call(m.target,
+                                      self.shards[m.target].offer_many,
+                                      parked)
+                if wm is not None:
+                    self.shard_acked[m.target].update(wm)
+            # an interrupted replay bootstrap on the target has already
+            # scanned (and filtered out) indices whose slots just moved
+            # here; rewind it so they are revisited at the new epoch
+            self._shard_call(m.target, self.shards[m.target].rewind_replays)
+
+    def add_shard(self, shard=None, **proxy_kwargs) -> int:
+        """Spin up shard N+1 while traffic flows: a fresh in-process
+        shard (or an explicit handle) joins with zero slots and owes
+        nothing routed before it joined — its push sources start at the
+        current cursors, so it never holds the collective ack back.
+        The epoch bumps so live consumers discover the wider shard set;
+        records land on it once slots are migrated over
+        (``migrate_slots`` / ``split_shard``)."""
+        with self._lock:
+            i = len(self.shards)
+            if shard is None:
+                kw = dict(self._proxy_defaults)
+                kw.update(proxy_kwargs)
+                shard = LocalShard(LcapProxy({}, modules=list(self._modules),
+                                             batch_size=self.batch_size,
+                                             **kw), index=i)
+            shard.index = i
+            self.shards.append(shard)
+            self.alive.append(True)
+            self.shard_acked.append({})
+            self.stats["shards_added"] += 1
+            for pid in self.journals:
+                first = self.cursors[pid]
+                self._shard_call(i, shard.add_source, pid, first)
+                self._shard_call(i, shard.set_replay_reader, pid,
+                                 ClusterReplayReader(self, pid, i))
+                self.shard_acked[i][pid] = first - 1
+            obs = getattr(self, "_obs", None)
+            proxy = getattr(shard, "proxy", None)
+            if obs is not None and proxy is not None:
+                proxy.attach_registry(obs, {"shard": str(i)})
+            if proxy is not None:
+                # replicate group registrations: records routed to the
+                # new shard park in each group's pending backlog until
+                # that group's fan-in stream discovers the shard (epoch
+                # bump) and subscribes — no window where the new shard
+                # consumes-and-acks what a group never saw
+                for other in self.shards[:i]:
+                    peer = getattr(other, "proxy", None)
+                    if peer is None:
+                        continue
+                    for gname in list(peer.groups):
+                        proxy.ensure_group(gname)
+            self.routing = self.routing.bumped()
+            self.stats["epoch_bumps"] += 1
+            return i
+
+    def split_shard(self, source: Optional[int] = None,
+                    **proxy_kwargs) -> int:
+        """Shard split under load: add shard N+1 and migrate half of
+        ``source``'s slot range (the most-loaded live shard when
+        unspecified) to it while producers keep offering.  Returns the
+        new shard's index; the migration commits asynchronously."""
+        with self._lock:
+            if self._migration is not None:
+                raise ClusterError("a migration is already in flight")
+            if source is None:
+                counts = self.routing.counts(len(self.shards))
+                live = [i for i in range(len(self.shards)) if self.alive[i]]
+                source = max(live, key=lambda i: counts[i])
+            elif not (0 <= source < len(self.shards)
+                      and self.alive[source]):
+                raise ClusterError(f"split source {source} is not a "
+                                   "live shard")
+            new = self.add_shard(**proxy_kwargs)
+            mine = self.routing.slots_of(source)
+            if mine:
+                self.migrate_slots(mine[:(len(mine) + 1) // 2], new)
+            return new
+
+    def _redeliver_locked(self, moved: Sequence[int],
+                          handoff: Dict[str, int]) -> int:
+        """The shared migration invariant, forced flavor: re-read every
+        journal above the per-producer handoff watermark and re-offer
+        the rows whose slots are in ``moved`` to their current owners.
+        Returns the number of records redelivered."""
+        redelivered = 0
+        owner_arr = self.routing.owner_array()
+        moved_mask = np.zeros(self.n_slots, dtype=bool)
+        moved_mask[list(moved)] = True
+        for pid, log in self.journals.items():
+            lo = max(log.first_index, handoff.get(pid, 0) + 1)
+            end = self.cursors[pid]          # routed so far
+            offers: List[List[Tuple[str, R.RecordBatch, int]]] = \
+                [[] for _ in self.shards]
+            while lo < end:
+                batch = log.read(lo, self.batch_size)
+                if not batch:
+                    break
+                slots = batch_slots(batch, self.n_slots)
+                idx = batch.indices_np().astype(np.int64)
+                keep = np.flatnonzero((idx < end) & moved_mask[slots])
+                hi = int(idx[-1])
+                if keep.size:
+                    owner = owner_arr[slots[keep]]
+                    for o in np.unique(owner).tolist():
+                        rows = keep[owner == o]
+                        offers[o].append((pid, batch.select(rows),
+                                          int(idx[rows[-1]])))
+                    redelivered += int(keep.size)
+                lo = hi + 1
+            for i, shard_offers in enumerate(offers):
+                if shard_offers and self.alive[i]:
+                    self._shard_call(i, self.shards[i].offer_many,
+                                     shard_offers)
+        return redelivered
+
+    def _reoffer_parked_locked(self, parked, moved_mask: np.ndarray,
+                               drop_above: Dict[str, int]) -> None:
+        """Hand a cancelled migration's parked records back to their
+        current owners.  Rows in ``moved_mask`` slots above the dead
+        shard's watermark (``drop_above``) are dropped — the forced
+        journal re-read already redelivers them — so a cancel does not
+        double-offer what both paths cover."""
+        owner_arr = self.routing.owner_array()
+        offers: List[List[Tuple[str, R.RecordBatch, int]]] = \
+            [[] for _ in self.shards]
+        for pid, batch, hi in parked:
+            slots = batch_slots(batch, self.n_slots)
+            idx = batch.indices_np().astype(np.int64)
+            cut = drop_above.get(pid, -1)
+            keep = np.flatnonzero(~(moved_mask[slots] & (idx > cut)))
+            if not keep.size:
+                continue
+            owner = owner_arr[slots[keep]]
+            for o in np.unique(owner).tolist():
+                rows = keep[owner == o]
+                offers[o].append((pid, batch.select(rows), hi))
+        for i, shard_offers in enumerate(offers):
+            if shard_offers and self.alive[i]:
+                wm = self._shard_call(i, self.shards[i].offer_many,
+                                      shard_offers)
+                if wm is not None:
+                    self.shard_acked[i].update(wm)
 
     # ------------------------------------------------------------- acks
     def _collect_watermarks(self, skip: Sequence[int] = ()) -> None:
@@ -490,6 +789,7 @@ class LcapCluster:
         sources' ``acked``) and propagate the collective minimum."""
         with self._lock:
             self._collect_watermarks()
+            self._advance_migration_locked()
             self._ack_journals()
 
     def _ack_journals(self) -> None:
@@ -522,15 +822,29 @@ class LcapCluster:
         with self._lock:
             stats = dict(self.stats)
             alive = list(self.alive)
-            owned = [0] * len(self.shards)
-            for o in self.slot_owner:
-                owned[o] += 1
+            routing = self.routing
+            owned = routing.counts(len(self.shards))
             acked = dict(self.journal_acked)
             cursors = dict(self.cursors)
+            migrating = self._migration is not None
+            parked = self._parked_count
+            shard_lag = [sum(max(0, cursors[pid] - 1
+                                 - self.shard_acked[i].get(
+                                     pid, cursors[pid] - 1))
+                             for pid in cursors)
+                         for i in range(len(self.shards))]
         out = []
         for key, v in stats.items():
             out.append((f"lcap_cluster_{key}_total", "counter",
                         f"cluster stats[{key}]", {}, v))
+        out.append(("lcap_routing_epoch", "gauge",
+                    "routing table epoch (bumps on every topology "
+                    "change)", {}, routing.epoch))
+        out.append(("lcap_migration_in_flight", "gauge",
+                    "1 while a slot migration is draining", {},
+                    int(migrating)))
+        out.append(("lcap_migration_parked_records", "gauge",
+                    "records parked for draining slots", {}, parked))
         for i in range(len(alive)):
             lb = {"shard": str(i)}
             out.append(("lcap_shard_alive", "gauge",
@@ -538,6 +852,10 @@ class LcapCluster:
                         int(alive[i])))
             out.append(("lcap_shard_slots_owned", "gauge",
                         "routing slots currently owned", lb, owned[i]))
+            out.append(("lcap_shard_dispatch_lag", "gauge",
+                        "records routed but not yet acknowledged by "
+                        "the shard (autoscaling signal)", lb,
+                        shard_lag[i]))
         for pid in acked:
             lb = {"producer": pid}
             out.append(("lcap_journal_acked", "gauge",
@@ -546,6 +864,57 @@ class LcapCluster:
                         "highest journal index routed to shards", lb,
                         cursors.get(pid, 1) - 1))
         return out
+
+    def autoscale_signals(self) -> Dict[str, Dict[str, int]]:
+        """Backpressure signals an external operator loop feeds into
+        add/migrate decisions, per live shard: ``offer_queue_depth``
+        (records admitted but not yet dispatched; ``-1`` for remote
+        shards, whose depth is read from their own registry),
+        ``dispatch_lag`` (records routed to the shard but not yet
+        acknowledged by it) and ``slots_owned``.  The same numbers are
+        exported through the registry as ``lcap_buffered_records`` and
+        ``lcap_shard_dispatch_lag``."""
+        with self._lock:
+            counts = self.routing.counts(len(self.shards))
+            out: Dict[str, Dict[str, int]] = {}
+            for i, shard in enumerate(self.shards):
+                if not self.alive[i]:
+                    continue
+                proxy = getattr(shard, "proxy", None)
+                depth = proxy.buffered if proxy is not None else -1
+                lag = sum(max(0, self.cursors[pid] - 1
+                              - self.shard_acked[i].get(
+                                  pid, self.cursors[pid] - 1))
+                          for pid in self.journals)
+                out[str(i)] = {"offer_queue_depth": depth,
+                               "dispatch_lag": lag,
+                               "slots_owned": counts[i]}
+            return out
+
+    def retention_horizons(self) -> Dict[str, int]:
+        """Per producer, the oldest still-live cursor: the smallest
+        journal index any current reader may still (re)read — the
+        collective ack frontier (no group ever revisits below it), any
+        unfinished replay bootstrap's rewind point on a live shard
+        (active or parked durable), and the in-flight migration's
+        handoff.  The stream-janitor (history.StreamJanitor) trims
+        ``HistoryStore`` strictly below this, minus its floor."""
+        with self._lock:
+            out: Dict[str, int] = {}
+            for pid in self.journals:
+                h = self.journal_acked[pid] + 1
+                if self._migration is not None:
+                    h = min(h, self._migration.handoff.get(pid, h) + 1)
+                for i, shard in enumerate(self.shards):
+                    if not self.alive[i]:
+                        continue
+                    proxy = getattr(shard, "proxy", None)
+                    if proxy is not None:
+                        floor = proxy.replay_floor(pid)
+                        if floor is not None:
+                            h = min(h, floor)
+                out[pid] = h
+            return out
 
     def metrics(self) -> Dict[str, dict]:
         """One cluster snapshot: every live shard's registry snapshot
@@ -602,10 +971,18 @@ class LcapCluster:
 
     # ------------------------------------------------------------ failover
     def kill_shard(self, index: int, reason: str = "killed") -> None:
-        """Fail shard ``index``: its slots are re-routed round-robin to
-        the survivors and its unacknowledged backlog is re-read from the
-        journals and re-offered to the new owners (at-least-once — the
-        journal never trimmed past the dead shard's own watermark)."""
+        """Fail shard ``index`` — a *forced zero-handoff migration*
+        through the same invariant as ``migrate_slots``: records above
+        the handoff watermark whose slots moved are re-offered to the
+        new owners at the next epoch.  Forced means the handoff cannot
+        be negotiated — it collapses to the dead shard's own last
+        per-journal watermark — so the unacknowledged backlog
+        ``(acked, cursor]`` is re-read from the journals and
+        redelivered: zero loss, at-least-once (the journal never
+        trimmed past the dead shard's own watermark).  The dead shard's
+        slots are reassigned round-robin to the survivors; a graceful
+        migration the dead shard participated in is cancelled first and
+        its parked records folded into the redelivery."""
         with self._lock:
             if not self.alive[index]:
                 return
@@ -616,46 +993,37 @@ class LcapCluster:
             if not survivors:
                 raise ClusterError(
                     f"shard {index} failed ({reason}); no shards left")
-            moved = {s for s, o in enumerate(self.slot_owner) if o == index}
+            carry = []
+            m = self._migration
+            if m is not None and (index == m.target or index in m.sources):
+                # the graceful path lost a participant: cancel it and
+                # let the forced path below absorb the parked records
+                self._migration = None
+                self.routing = self.routing.cancel_drain()
+                self.stats["epoch_bumps"] += 1
+                self.stats["migrations_cancelled"] += 1
+                carry, self._parked, self._parked_count = self._parked, [], 0
+            # forced migration: handoff = the dead shard's own watermark
+            handoff = {pid: self.shard_acked[index].get(pid, 0)
+                       for pid in self.journals}
+            moved = set(self.routing.slots_of(index))
             rr = itertools.cycle(survivors)
-            for s in moved:
-                self.slot_owner[s] = next(rr)
+            self.routing = self.routing.reassign({s: next(rr)
+                                                  for s in sorted(moved)})
+            self.stats["epoch_bumps"] += 1
             # a bootstrap in progress on a survivor has already scanned
             # indices whose slots just moved here and filtered them out;
             # restart those replays from their start (at-least-once
             # through failover — the reducers re-apply a prefix)
             for i in survivors:
                 self._shard_call(i, self.shards[i].rewind_replays)
-            redelivered = 0
-            for pid, log in self.journals.items():
-                lo = max(log.first_index,
-                         self.shard_acked[index].get(pid, 0) + 1)
-                end = self.cursors[pid]          # routed so far
-                offers: List[List[Tuple[str, R.RecordBatch, int]]] = \
-                    [[] for _ in self.shards]
-                moved_mask = np.zeros(self.n_slots, dtype=bool)
-                moved_mask[list(moved)] = True
-                while lo < end:
-                    batch = log.read(lo, self.batch_size)
-                    if not batch:
-                        break
-                    slots = batch_slots(batch, self.n_slots)
-                    idx = batch.indices_np().astype(np.int64)
-                    keep = np.flatnonzero((idx < end) & moved_mask[slots])
-                    hi = int(idx[-1])
-                    if keep.size:
-                        owner = np.asarray(self.slot_owner)[slots[keep]]
-                        for o in np.unique(owner).tolist():
-                            rows = keep[owner == o]
-                            offers[o].append((pid, batch.select(rows),
-                                              int(idx[rows[-1]])))
-                        redelivered += int(keep.size)
-                    lo = hi + 1
-                for i, shard_offers in enumerate(offers):
-                    if shard_offers and self.alive[i]:
-                        self._shard_call(i, self.shards[i].offer_many,
-                                         shard_offers)
+            redelivered = self._redeliver_locked(moved, handoff)
             self.stats["failover_redelivered"] += redelivered
+            if carry:
+                moved_mask = np.zeros(self.n_slots, dtype=bool)
+                if moved:
+                    moved_mask[list(moved)] = True
+                self._reoffer_parked_locked(carry, moved_mask, handoff)
             # the dead shard no longer gates the collective ack
             self._ack_journals()
 
@@ -756,8 +1124,10 @@ class LcapClusterService:
                  poll_interval: float = 0.002):
         from .server import LcapService
         self.cluster = cluster
+        self.host = host
         self.poll_interval = poll_interval
         self.services = []
+        self._started = False
         for i, shard in enumerate(cluster.shards):
             if not isinstance(shard, LocalShard):
                 raise ClusterError("LcapClusterService hosts in-process "
@@ -766,7 +1136,8 @@ class LcapClusterService:
             self.services.append(LcapService(
                 shard.proxy, host=host, port=0,
                 poll_interval=poll_interval,
-                shard_index=i, shard_count=len(cluster.shards)))
+                shard_index=i, shard_count=len(cluster.shards),
+                cluster_info=self.cluster_info))
         self._stop = threading.Event()
         self._distributor = threading.Thread(target=self._route_loop,
                                              daemon=True)
@@ -774,6 +1145,32 @@ class LcapClusterService:
     @property
     def addresses(self) -> List[Tuple[str, int]]:
         return [svc.address for svc in self.services]
+
+    def cluster_info(self) -> Dict:
+        """The topology snapshot every shard service piggybacks on its
+        replies and serves through the ``topology`` verb: the routing
+        epoch, the shard count, and each shard's address — a consumer
+        connected to *any* shard can re-resolve the whole fan-in."""
+        return {"epoch": self.cluster.routing.epoch,
+                "shards": len(self.cluster.shards),
+                "addresses": [list(svc.address) for svc in self.services]}
+
+    def add_shard(self, **proxy_kwargs) -> int:
+        """Elastically grow the service: a fresh in-process shard joins
+        the cluster (``LcapCluster.add_shard``) and immediately serves
+        its own port.  Live consumers discover it through the epoch
+        bump piggybacked on their next reply."""
+        from .server import LcapService
+        i = self.cluster.add_shard(**proxy_kwargs)
+        svc = LcapService(self.cluster.shards[i].proxy, host=self.host,
+                          port=0, poll_interval=self.poll_interval,
+                          shard_index=i,
+                          shard_count=len(self.cluster.shards),
+                          cluster_info=self.cluster_info)
+        self.services.append(svc)
+        if self._started:
+            svc.start()
+        return i
 
     def _route_loop(self) -> None:
         import time
@@ -789,6 +1186,7 @@ class LcapClusterService:
     def start(self) -> "LcapClusterService":
         for svc in self.services:
             svc.start()
+        self._started = True
         self._distributor.start()
         return self
 

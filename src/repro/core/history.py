@@ -194,7 +194,8 @@ class HistoryStore:
         self._segments: List[_HistSegment] = []
         self._lock = threading.Lock()
         self.stats = {"archived_segments": 0, "archived_records": 0,
-                      "merges": 0, "torn_dropped": 0, "duplicate_skips": 0}
+                      "merges": 0, "torn_dropped": 0, "duplicate_skips": 0,
+                      "retention_trims": 0, "retention_dropped": 0}
         if base_path:
             self._load()
 
@@ -334,6 +335,53 @@ class HistoryStore:
             if self._segments:
                 self._merge_locked()
 
+    # -- retention -----------------------------------------------------------
+    def trim(self, horizon: int) -> int:
+        """Retention trim: drop archived records with journal index
+        strictly below ``horizon``.  Safe whenever no live cursor can
+        replay below ``horizon`` (the stream-janitor's contract): a
+        bootstrap from any index >= horizon reads only surviving
+        records, so reconstructed state is unchanged.  Segments wholly
+        below the horizon are unlinked; the boundary segment is
+        rewritten per record (write-to-tmp + atomic rename under a new
+        range filename, crash-safe like a merge).  Returns the number
+        of records dropped."""
+        with self._lock:
+            if not self._segments or horizon <= self._segments[0].first:
+                return 0
+            dropped = 0
+            kept: List[_HistSegment] = []
+            for seg in self._segments:
+                if seg.last < horizon:
+                    dropped += len(seg.batch)
+                    if seg.path and os.path.exists(seg.path):
+                        os.remove(seg.path)
+                    continue
+                if seg.first >= horizon:
+                    kept.append(seg)
+                    continue
+                lo = bisect.bisect_left(seg.indices, horizon)
+                if lo == 0:
+                    # the range label dips below the horizon but every
+                    # record survives (annihilated gap): keep as is
+                    kept.append(seg)
+                    continue
+                batch = R.RecordBatch.from_packed(list(seg.batch[lo:]))
+                path = None
+                if self.base_path:
+                    path = self._seg_path(horizon, seg.last)
+                    self._write_file(path, batch)
+                    if seg.path and seg.path != path \
+                            and os.path.exists(seg.path):
+                        os.remove(seg.path)
+                kept.append(_HistSegment(horizon, seg.last, batch, path))
+                dropped += lo
+            self._segments = kept
+            if dropped:
+                self.stats["retention_trims"] += 1
+                self.stats["retention_dropped"] += dropped
+            return dropped
+
     # -- reading -------------------------------------------------------------
     def read(self, start: int, max_records: int = 1024,
              ) -> Tuple[R.RecordBatch, int]:
@@ -379,6 +427,15 @@ class JournalReplayReader:
     def __init__(self, log):
         self.log = log
 
+    @property
+    def floor_is_retention(self) -> bool:
+        """True when a raised ``available_lo`` reflects a retention
+        trim of an attached history tier (``StreamJanitor``) — a
+        policy decision ``replay=True`` should clamp to — rather than
+        a journal with no history at all, where a trimmed head means
+        the records are simply gone and replay must be refused."""
+        return getattr(self.log, "history", None) is not None
+
     def available_lo(self) -> int:
         hist = getattr(self.log, "history", None)
         if hist is not None and hist.segment_count:
@@ -399,3 +456,52 @@ class JournalReplayReader:
         if not batch:
             return batch, max(start, self.log.last_index + 1)
         return batch, batch.packed_index(len(batch) - 1) + 1
+
+
+class StreamJanitor:
+    """Retention-SLO sweeper: bound how much history the tier keeps.
+
+    Archiving is append-only — without a janitor the history store
+    grows forever.  Each :meth:`sweep` asks its target (an
+    ``LcapProxy`` or ``LcapCluster`` — anything with
+    ``retention_horizons()``) for the **oldest still-live cursor** per
+    journal: the collective ack frontier across consumer groups, the
+    rewind point of any unfinished replay bootstrap (active consumers
+    *and* parked durables), and an in-flight migration's handoff
+    watermark.  Nothing below that cursor can ever be read again, so
+    the janitor trims each journal's ``HistoryStore`` behind it —
+    except for the last ``floor`` journal indices, the configurable
+    retention SLO that keeps a bootstrap window available for
+    late-arriving replay subscribers (``replay=True`` clamps to the
+    trimmed ``available_lo``).
+    """
+
+    def __init__(self, target, floor: int = 4096):
+        self.target = target
+        self.floor = max(0, int(floor))
+        self.stats = {"sweeps": 0, "records_dropped": 0}
+
+    def _journals(self) -> Dict[str, object]:
+        journals = getattr(self.target, "journals", None)
+        if journals is not None:
+            return dict(journals)
+        return {pid: src
+                for pid, src in getattr(self.target, "producers", {}).items()
+                if getattr(src, "history", None) is not None}
+
+    def sweep(self) -> Dict[str, Dict[str, int]]:
+        """One retention pass; returns per journal the horizon applied
+        and the records dropped."""
+        horizons = self.target.retention_horizons()
+        report: Dict[str, Dict[str, int]] = {}
+        for pid, log in self._journals().items():
+            hist = getattr(log, "history", None)
+            if hist is None:
+                continue
+            horizon = min(horizons.get(pid, 0),
+                          log.last_index - self.floor + 1)
+            dropped = hist.trim(horizon) if horizon > 0 else 0
+            self.stats["records_dropped"] += dropped
+            report[pid] = {"horizon": horizon, "dropped": dropped}
+        self.stats["sweeps"] += 1
+        return report

@@ -459,6 +459,17 @@ class LcapProxy:
                 admitted += self.offer(pid, batch, hi)
         return admitted
 
+    def ensure_group(self, name: str) -> None:
+        """Pre-create consumer group ``name`` with no members: records
+        dispatched to it park in the group's pending backlog (and gate
+        the collective ack) until a member subscribes.  This is how the
+        cluster replicates existing group registrations onto a shard
+        that joins *after* the groups did — nothing routed to the new
+        shard is consumed-and-acked before the groups' fan-in streams
+        discover it."""
+        with self._lock:
+            self.groups.setdefault(name, Group(name))
+
     def subscribe(self, group: Optional[str], flags: Optional[int] = None,
                   mode: str = PERSISTENT, cid: Optional[str] = None,
                   types: Optional[Iterable[int]] = None,
@@ -920,6 +931,8 @@ class LcapProxy:
         # keep draining.  Groups that have recovered drain their parked
         # backlog first (journal order is older than the buffer).
         for g in groups:
+            if not any(m.alive for m in g.members.values()):
+                continue    # memberless: records stay parked until join
             while g.pending and not self._saturated(g):
                 pid, idx, buf = g.pending.popleft()
                 self._dispatch_to_group(g, pid, idx, buf)
@@ -1108,21 +1121,30 @@ class LcapProxy:
                     f"producer {pid!r} has no replayable history "
                     f"(attach a HistoryStore, or subscribe without replay)")
             lo = reader.available_lo()
-            if start < lo:
-                raise SubscriptionError(
-                    f"history of {pid!r} starts at index {lo}; cannot "
-                    f"replay from {start}")
+            pid_start = start
+            if pid_start < lo:
+                if replay is not True or \
+                        not getattr(reader, "floor_is_retention", False):
+                    raise SubscriptionError(
+                        f"history of {pid!r} starts at index {lo}; cannot "
+                        f"replay from {start}")
+                # replay=True means "from the oldest retained history";
+                # a retention trim (history.StreamJanitor) legitimately
+                # moves that point forward.  Only with a history tier
+                # attached, though — a bare journal whose head trimmed
+                # has no retention policy, the records are just gone.
+                pid_start = lo
             if cons.mode == EPHEMERAL:
                 hw = cons.since.get(pid, 0)  # type: ignore[attr-defined]
             elif pid in buf_lo:
                 hw = buf_lo[pid] - 1
             else:
                 hw = self.ingested.get(pid, 0)
-            if hw >= start:
+            if hw >= pid_start:
                 cons.replay_src[pid] = reader
-                cons.replay_pos[pid] = start
+                cons.replay_pos[pid] = pid_start
                 cons.replay_hw[pid] = hw
-                cons.replay_lo[pid] = start
+                cons.replay_lo[pid] = pid_start
 
     def fetch_replay(self, cid: str, max_records: int = 1024,
                      ) -> Tuple[List[Tuple[str, R.RecordBatch]], bool]:
@@ -1197,6 +1219,49 @@ class LcapProxy:
                         cons.replay_pos[pid] = cons.replay_lo[pid]
                     n += 1
             return n
+
+    @property
+    def buffered(self) -> int:
+        """Records admitted but not yet dispatched — the offer-queue
+        depth, the primary backpressure/autoscaling signal (also
+        exported as ``lcap_buffered_records``)."""
+        return self._buffered
+
+    def replay_floor(self, pid: str) -> Optional[int]:
+        """The lowest history index an *unfinished* replay bootstrap of
+        producer ``pid`` may still (re)read, across active consumers
+        and parked durables — a rewind (``rewind_active_replays``)
+        sends the bootstrap back to its start, so the start is what
+        pins retention, not the current position.  None when no
+        bootstrap of ``pid`` is in flight."""
+        with self._lock:
+            floor = None
+            parked = (c for g in self.groups.values()
+                      for c, _dl in g.parked.values())
+            for cons in (*self.consumers.values(), *parked):
+                if pid in cons.replay_pos:
+                    lo = cons.replay_lo[pid]
+                    if floor is None or lo < floor:
+                        floor = lo
+            return floor
+
+    def retention_horizons(self) -> Dict[str, int]:
+        """Per journal-backed producer, the oldest still-live cursor
+        (see ``LcapCluster.retention_horizons`` for the cluster
+        flavor): the collective ack frontier, held back by any
+        unfinished replay bootstrap's rewind point.  Input to the
+        history tier's ``StreamJanitor``."""
+        with self._lock:
+            out: Dict[str, int] = {}
+            for pid, src in self.producers.items():
+                if not isinstance(src, Llog):
+                    continue
+                h = self.upstream_acked.get(pid, 0) + 1
+                floor = self.replay_floor(pid)
+                if floor is not None:
+                    h = min(h, floor)
+                out[pid] = h
+            return out
 
     # -------------------------------------------------------------- fetch
     def fetch(self, cid: str,

@@ -487,6 +487,17 @@ WIRE_V2 = 2
 #: which stays far below this in any real batch
 WIRE2_MAGIC = 0xC015FEED
 
+#: capability keys exchanged on the cluster control plane (the ``caps``
+#: verb, subscribe negotiation) and piggybacked on data-path replies:
+#: record-frame generation, deep-batched offer support, and the
+#: epoch-versioned routing plane (a peer advertising CAP_EPOCH stamps
+#: the current routing epoch on its subscribe/fetch/commit replies and
+#: answers the ``topology`` verb, so consumers re-resolve the shard
+#: fan-in when the epoch bumps instead of assuming a fixed shard set)
+CAP_WIRE = "wire"
+CAP_DEEP = "deep"
+CAP_EPOCH = "epoch"
+
 
 def _as_i64(seq) -> np.ndarray:
     if type(seq) is np.ndarray and seq.dtype == np.int64:

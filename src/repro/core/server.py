@@ -43,17 +43,31 @@ from .transport import PROTOCOL_VERSION, RpcServer
 class LcapService:
     def __init__(self, proxy: LcapProxy, host: str = "127.0.0.1",
                  port: int = 0, poll_interval: float = 0.002,
-                 shard_index: int = None, shard_count: int = None):
+                 shard_index: int = None, shard_count: int = None,
+                 cluster_info=None):
         self.proxy = proxy
         self.poll_interval = poll_interval
         # cluster awareness: a shard daemon stamps its position into
         # subscribe replies so fan-in clients can sanity-check topology
         self.shard_index = shard_index
         self.shard_count = shard_count
+        # topology awareness: a callable returning {"epoch", "shards",
+        # "addresses"} (LcapClusterService.cluster_info).  When set,
+        # the routing epoch is piggybacked on subscribe/fetch/commit
+        # replies and the ``topology`` verb serves the full snapshot,
+        # so a consumer connected to any one shard can detect epoch
+        # bumps and re-resolve the whole fan-in.
+        self.cluster_info = cluster_info
         self._stop = threading.Event()
         self.server = RpcServer(self._handle, self._disconnected, host, port)
         self.address = self.server.address
         self._poller = threading.Thread(target=self._poll_loop, daemon=True)
+
+    def _stamp(self, reply: Dict) -> Dict:
+        """Piggyback the routing epoch on a data-path reply."""
+        if self.cluster_info is not None:
+            reply["epoch"] = self.cluster_info()["epoch"]
+        return reply
 
     # ------------------------------------------------------------- service
     def _handle(self, msg: Dict, session: Dict) -> Dict:
@@ -79,14 +93,22 @@ class LcapService:
                 if self.shard_index is not None:   # cluster-aware reply
                     info = {**info, "shard": self.shard_index,
                             "shards": self.shard_count}
-                return {"v": PROTOCOL_VERSION, "wire": wire, **info}
+                return self._stamp({"v": PROTOCOL_VERSION, "wire": wire,
+                                    **info})
             if op == "caps":
                 # feature discovery for cluster peers: record-frame
-                # generation and deep-batched offer support.  An old
+                # generation, deep-batched offer support, and (when the
+                # shard is topology-aware) the routing epoch.  An old
                 # daemon answers with an unknown-op error reply, which
                 # callers treat as "v1, shallow".
-                return {"v": PROTOCOL_VERSION, "wire": WIRE_V2,
-                        "deep": True}
+                return self._stamp({"v": PROTOCOL_VERSION, "wire": WIRE_V2,
+                                    "deep": True})
+            if op == "topology":
+                # the full routing snapshot: epoch, shard count, and
+                # every shard's address — served by any one shard
+                if self.cluster_info is None:
+                    raise SessionError("not a topology-aware shard")
+                return {"v": PROTOCOL_VERSION, **self.cluster_info()}
             if op == "add_source":
                 self.proxy.add_source(msg["pid"], msg.get("first", 1))
                 return {"ok": True}
@@ -123,18 +145,20 @@ class LcapService:
                 wire = session.get("wire", WIRE_V1)
                 batches = self.proxy.fetch_batches(msg["cid"],
                                                    msg.get("max", 256))
-                return {"batches": [(pid, batch.to_wire(wire))
-                                    for pid, batch in batches]}
+                return self._stamp(
+                    {"batches": [(pid, batch.to_wire(wire))
+                                 for pid, batch in batches]})
             if op == "fetch_replay":
                 wire = session.get("wire", WIRE_V1)
                 batches, done = self.proxy.fetch_replay(msg["cid"],
                                                         msg.get("max", 256))
-                return {"batches": [(pid, batch.to_wire(wire))
-                                    for pid, batch in batches],
-                        "done": done}
+                return self._stamp(
+                    {"batches": [(pid, batch.to_wire(wire))
+                                 for pid, batch in batches],
+                     "done": done})
             if op == "commit":
                 self.proxy.commit(msg["cid"], msg["acks"])
-                return {"ok": True}
+                return self._stamp({"ok": True})
             if op == "ack":
                 self.proxy.ack(msg["cid"], msg["pid"], msg["index"])
                 return {"ok": True}

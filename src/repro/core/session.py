@@ -37,7 +37,7 @@ Failures surface as typed exceptions (``UnknownConsumerError``,
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Any, Deque, Dict, Iterator, List, Optional, Tuple, Union
 
 from . import records as R
@@ -147,12 +147,28 @@ class _WireBackend:
         #: record-frame generation the server will emit, learned from
         #: the subscribe/resume reply (v1 until negotiated)
         self.wire = R.WIRE_V1
+        #: highest routing epoch piggybacked on any reply from this
+        #: shard (0 until a topology-aware peer stamps one); the fan-in
+        #: layer watches it to detect topology changes mid-stream
+        self.epoch = 0
 
     def _call(self, msg: Dict[str, Any]) -> Dict[str, Any]:
         msg.setdefault("v", PROTOCOL_VERSION)
         reply = self.rpc.call(msg)
         raise_reply_error(reply)
+        e = reply.get(R.CAP_EPOCH)
+        if e is not None and int(e) > self.epoch:
+            self.epoch = int(e)
         return reply
+
+    def topology(self) -> Optional[Dict[str, Any]]:
+        """The cluster topology snapshot (epoch, shard count, shard
+        addresses) served by a topology-aware shard; None when the
+        peer does not speak the verb."""
+        try:
+            return self._call({"op": "topology"})
+        except SessionError:
+            return None
 
     def attach(self, spec: Subscription,
                resume: Optional[bool] = None) -> Dict:
@@ -442,6 +458,13 @@ class FanInStream:
     ``lost``); its unacknowledged records are re-routed by the cluster
     coordinator to the surviving shards, so the group still sees them
     (at-least-once) through the remaining children.
+
+    The stream also tracks the cluster's routing ``epoch``: every fetch
+    round compares the session's current epoch against the one this
+    stream last saw, and on a bump (slot migration, shard add/split,
+    forced failover) re-resolves the shard set — shards that joined
+    since subscribe get a fresh child ``Stream``, without restarting
+    the consumer or disturbing the existing children's cursors.
     """
 
     def __init__(self, session: "ClusterSession", spec: Subscription,
@@ -452,6 +475,32 @@ class FanInStream:
         self._rr = 0
         self._sources: Dict[int, Stream] = {}  # id(batch) -> owning child
         self.lost: List[int] = []
+        #: routing epoch at which the shard set was last resolved
+        self.epoch: int = session.current_epoch()
+
+    def _maybe_refresh(self) -> None:
+        """Re-resolve the shard set when the routing epoch moved past
+        the one this stream subscribed under."""
+        current = self.session.current_epoch()
+        if current <= self.epoch:
+            return
+        self.epoch = current
+        self.session._ensure_sessions()
+        have = {i for i, _ in self._children} | set(self.lost)
+        # a shard that joined after this stream subscribed: attach a
+        # live child there.  No replay bootstrap — any history the new
+        # shard's slots carry was already delivered by their previous
+        # owners before the migration committed.
+        child_spec = (replace(self.spec, replay=None)
+                      if self.spec.replay else self.spec)
+        for i, sess in self.session._sessions:
+            if i in have or not self.session._shard_alive(i):
+                continue
+            try:
+                self._children.append((i, sess._open(child_spec,
+                                                     resume=None)))
+            except (ConnectionError, OSError):
+                continue
 
     # -- topology ------------------------------------------------------------
     @property
@@ -518,6 +567,7 @@ class FanInStream:
         becomes commit-pending on its owning shard."""
         cap = max_records or self.spec.max_records
         out: List[Tuple[str, R.RecordBatch]] = []
+        self._maybe_refresh()
         children = self._live()
         taken = 0
         for k in range(len(children)):
@@ -544,6 +594,7 @@ class FanInStream:
         """Round-robin the child iterators; each child keeps its own
         auto-commit contract (a batch is acknowledged one fetch round
         after it was yielded).  Stops when every shard is drained."""
+        self._maybe_refresh()
         children = self._live()
         for k in range(len(children)):
             pair = children[(self._rr + k) % len(children)]
@@ -614,26 +665,135 @@ class FanInStream:
 class ClusterSession:
     """A connection to a sharded cluster: one child ``Session`` per
     shard, one declarative surface.  ``subscribe``/``resume`` return a
-    ``FanInStream`` that spans every live shard."""
+    ``FanInStream`` that spans every live shard.
+
+    The session is *topology-aware*: it can report the cluster's
+    current routing epoch (``current_epoch``) and grow its shard set
+    when the cluster does (``_ensure_sessions``).  Three discovery
+    paths, in order of directness:
+
+    - ``cluster=``   in-process ``LcapCluster`` — epoch and shard list
+      read straight off the coordinator's routing table;
+    - ``topology=``  a callable returning ``{"epoch", "shards",
+      "addresses"}`` (``LcapClusterService.cluster_info``);
+    - neither        the highest epoch piggybacked on any shard reply,
+      with the ``topology`` wire verb probed for addresses when a bump
+      is seen (falls back to a static shard set against pre-epoch
+      daemons).
+    """
 
     def __init__(self, sessions: List[Tuple[int, Session]],
-                 alive=None):
+                 alive=None, cluster=None, topology=None):
         self._sessions = list(sessions)
         self._alive = alive                  # callable: shard index -> bool
+        self._cluster = cluster              # in-process LcapCluster
+        self._topology = topology            # callable -> topology snapshot
+        self._topology_unsupported = False
 
     def _shard_alive(self, index: int) -> bool:
-        return self._alive is None or self._alive(index)
+        if self._alive is not None:
+            return self._alive(index)
+        if self._cluster is not None:
+            alive = self._cluster.alive
+            return index < len(alive) and alive[index]
+        return True
+
+    # -- topology ------------------------------------------------------------
+    def current_epoch(self) -> int:
+        """The cluster's routing epoch as this session can best see it
+        (0 against a target with no epoch source at all)."""
+        if self._cluster is not None:
+            return self._cluster.routing.epoch
+        if self._topology is not None:
+            try:
+                return int(self._topology()["epoch"])
+            except (ConnectionError, OSError, KeyError, TypeError):
+                pass
+        # piggybacked epochs: the max any shard stamped on a reply
+        return max((getattr(sess._backend, "epoch", 0)
+                    for _i, sess in self._sessions), default=0)
+
+    def _topology_snapshot(self) -> Optional[Dict]:
+        """Current ``{"epoch", "shards", "addresses"}``, or None when
+        no discovery path works (static wire shard set)."""
+        if self._topology is not None:
+            try:
+                return self._topology()
+            except (ConnectionError, OSError):
+                return None
+        if self._topology_unsupported:
+            return None
+        for i, sess in self._sessions:
+            if not self._shard_alive(i):
+                continue
+            probe = getattr(sess._backend, "topology", None)
+            if probe is None:                # in-process backend
+                self._topology_unsupported = True
+                return None
+            try:
+                reply = probe()
+            except (ConnectionError, OSError):
+                continue
+            if reply is None:                # pre-epoch daemon
+                self._topology_unsupported = True
+                return None
+            return reply
+        return None
+
+    def _ensure_sessions(self) -> None:
+        """Open child sessions for shards that joined the cluster after
+        this session connected (shard add / split)."""
+        have = {i for i, _ in self._sessions}
+        if self._cluster is not None:
+            for i, shard in enumerate(self._cluster.shards):
+                if i not in have and self._cluster.alive[i]:
+                    self._sessions.append((i, Session(shard.backend())))
+            return
+        info = self._topology_snapshot()
+        if not info:
+            return
+        for i, addr in enumerate(info.get("addresses") or []):
+            if i not in have:
+                try:
+                    backend = _WireBackend(_parse_address(addr))
+                except (ConnectionError, OSError):
+                    continue
+                self._sessions.append((i, Session(backend)))
 
     def subscribe(self, subscription: Union[Subscription, str, None] = None,
                   *, resume: Optional[bool] = None,
                   **spec_kwargs) -> FanInStream:
         spec = _make_spec(subscription, spec_kwargs)
+        self._ensure_sessions()   # the shard set may have grown since connect
         children = []
+        resumed_any = False
         for i, sess in self._sessions:
-            if self._shard_alive(i):
-                children.append((i, sess._open(spec, resume=resume)))
+            if not self._shard_alive(i):
+                continue
+            if resume:
+                # per-shard resume: a durable whose slots migrated (or
+                # whose cluster grew) has parked state on *some* shards
+                # only — resume where it exists, attach fresh elsewhere,
+                # and fail only when no shard resumed at all
+                try:
+                    child = sess._open(spec, resume=True)
+                    resumed_any = True
+                except UnknownConsumerError:
+                    child = sess._open(spec, resume=None)
+            else:
+                child = sess._open(spec, resume=resume)
+            children.append((i, child))
         if not children:
             raise SessionError("no live shards to subscribe on")
+        if resume and not resumed_any:
+            for _i, child in children:
+                try:
+                    child.close()
+                except (ConnectionError, OSError):
+                    pass
+            raise UnknownConsumerError(
+                f"no shard holds parked state for durable consumer "
+                f"{spec.group}/{spec.name!r}")
         return FanInStream(self, spec, children)
 
     def resume(self, group: str, name: str, **spec_kwargs) -> FanInStream:
@@ -813,10 +973,12 @@ def connect(target: Union[LcapProxy, "LcapService", "LcapCluster",
         sessions = [(i, Session(shard.backend()))
                     for i, shard in enumerate(target.shards)
                     if target.alive[i]]
-        alive = target.alive
-        return ClusterSession(sessions, alive=lambda i: alive[i])
+        return ClusterSession(sessions, cluster=target)
     if isinstance(target, LcapClusterService):
-        target = target.addresses
+        return ClusterSession(
+            [(i, Session(_WireBackend(_parse_address(a))))
+             for i, a in enumerate(target.addresses)],
+            topology=target.cluster_info)
     if isinstance(target, list):           # a list of shard addresses
         return ClusterSession(
             [(i, Session(_WireBackend(_parse_address(a))))

@@ -1,0 +1,643 @@
+"""Epoch-versioned routing plane: RoutingTable snapshots, live slot
+migration (zero loss, zero duplication), shard add/split under load,
+forced migration through kill_shard, consumer-side epoch discovery
+(in-process and over the wire), parked-durable resume across topology
+churn, and retention SLOs (StreamJanitor over the history tier).
+
+The interleaving fuzz runs as an always-on seeded-random driver;
+hypothesis widens the schedule space when installed (guarded, like
+test_records.py / test_columnar.py).
+"""
+
+import random
+import time
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.core import records as R
+from repro.core.cluster import LcapCluster, LcapClusterService
+from repro.core.errors import ClusterError
+from repro.core.history import StreamJanitor
+from repro.core.llog import Llog
+from repro.core.routing import RoutingTable
+from repro.core.session import Subscription, connect
+
+
+def rec(oid=1, ver=0, t=R.CL_CREATE, name=b"f", **kw):
+    return R.ChangelogRecord(type=t, tfid=R.Fid(1, oid, ver),
+                             pfid=R.Fid(1, 0, 0), name=name, **kw)
+
+
+def mk_cluster(n_producers=2, n_shards=3, **kw):
+    logs = {f"mdt{i}": Llog(f"mdt{i}") for i in range(n_producers)}
+    return LcapCluster(logs, n_shards=n_shards, **kw), logs
+
+
+def feed(logs, lo, hi, oids=13):
+    for pid, log in logs.items():
+        for i in range(lo, hi):
+            log.log(rec(oid=i % oids, name=f"{pid}-{i}".encode()))
+
+
+def drain(cluster, stream, seen, want, rounds=300, forbid_dup=False):
+    """Pump + fetch + commit until ``seen`` covers ``want``; returns
+    the number of duplicate deliveries observed."""
+    dups = 0
+    for _ in range(rounds):
+        cluster.pump()
+        moved = 0
+        for pid, batch in stream.fetch(4096):
+            for i in batch.indices():
+                if (pid, i) in seen:
+                    dups += 1
+                    assert not forbid_dup, f"duplicate delivery {(pid, i)}"
+                seen.add((pid, i))
+            moved += len(batch)
+        stream.commit()
+        if not moved and seen >= want:
+            break
+    return dups
+
+
+def settle(cluster, rounds=100):
+    """Pump until the in-flight migration (if any) commits."""
+    for _ in range(rounds):
+        cluster.pump()
+        if cluster._migration is None:
+            return
+    raise AssertionError("migration never committed")
+
+
+# ------------------------------------------------------------ RoutingTable
+def test_routing_table_initial_stripes_and_is_immutable():
+    t = RoutingTable.initial(8, 3)
+    assert t.epoch == 0
+    assert t.slot_owner == (0, 1, 2, 0, 1, 2, 0, 1)
+    assert t.counts(3) == [3, 3, 2]
+    assert tuple(t.slots_of(2)) == (2, 5)
+    with pytest.raises(AttributeError):
+        t.epoch = 5
+    with pytest.raises(TypeError):
+        t.slot_owner[0] = 1
+    arr = t.owner_array()
+    assert not arr.flags.writeable
+
+
+def test_routing_table_evolution_bumps_epoch_each_step():
+    t = RoutingTable.initial(8, 2)
+    d = t.drain([0, 2], target=1)
+    assert d.epoch == 1
+    assert d.slot_owner == t.slot_owner          # ownership unchanged
+    assert d.draining == {0: 1, 2: 1}
+    assert bool(d.draining_mask()[0]) and not bool(d.draining_mask()[1])
+    c = d.commit_drain()
+    assert c.epoch == 2
+    assert c.slot_owner[0] == 1 and c.slot_owner[2] == 1
+    assert not c.draining
+    x = d.cancel_drain()
+    assert x.epoch == 2 and x.slot_owner == t.slot_owner and not x.draining
+    r = c.reassign({1: 0, 3: 0})
+    assert r.epoch == 3 and r.slot_owner[1] == 0 and r.slot_owner[3] == 0
+    b = r.bumped()
+    assert b.epoch == 4 and b.slot_owner == r.slot_owner
+    # originals untouched throughout
+    assert t.epoch == 0 and t.slot_owner == (0, 1, 0, 1, 0, 1, 0, 1)
+
+
+# ------------------------------------------------------- graceful migration
+def test_live_migration_zero_loss_zero_dup():
+    cluster, logs = mk_cluster(n_producers=2, n_shards=2)
+    stream = connect(cluster).subscribe("g", auto_commit=False)
+    feed(logs, 0, 40)
+    cluster.pump()
+    moved = cluster.migrate_slots(cluster.routing.slots_of(0)[:16], 1)
+    assert moved == 16
+    assert cluster.epoch >= 1
+    feed(logs, 40, 60)                   # traffic lands while draining
+    seen = set()
+    want = {(pid, i) for pid in logs for i in range(1, 61)}
+    drain(cluster, stream, seen, want, forbid_dup=True)
+    assert seen == want
+    assert cluster._migration is None
+    assert cluster.stats["migrations_completed"] == 1
+    assert cluster.stats["slots_migrated"] == 16
+    # the epoch invariant: drain and commit each bumped once at least
+    assert cluster.stats["epoch_bumps"] >= 2
+    for log in logs.values():
+        assert log.first_index == log.last_index + 1
+
+
+def test_migration_on_idle_cluster_commits_immediately():
+    cluster, logs = mk_cluster(n_producers=1, n_shards=2)
+    connect(cluster).subscribe("g", auto_commit=False)
+    slots = cluster.routing.slots_of(0)
+    cluster.migrate_slots(slots, 1)
+    assert cluster._migration is None     # nothing in flight to drain
+    assert all(o == 1 for o in cluster.slot_owner)
+
+
+def test_one_migration_in_flight_at_a_time():
+    cluster, logs = mk_cluster(n_producers=1, n_shards=2)
+    connect(cluster).subscribe("g", auto_commit=False)
+    feed(logs, 0, 30)
+    cluster.pump()
+    cluster.migrate_slots(cluster.routing.slots_of(0)[:8], 1)
+    if cluster._migration is not None:
+        with pytest.raises(ClusterError):
+            cluster.migrate_slots([0], 1)
+    with pytest.raises(ClusterError):
+        cluster.migrate_slots([0], 7)     # no such shard
+    with pytest.raises(ClusterError):
+        cluster.migrate_slots([999], 1 if cluster._migration is None else 0)
+
+
+def test_park_cap_backpressures_journal_reads():
+    cluster, logs = mk_cluster(n_producers=1, n_shards=2, park_cap=8)
+    stream = connect(cluster).subscribe("g", auto_commit=False)
+    feed(logs, 0, 10)
+    cluster.pump()
+    cluster.migrate_slots(cluster.routing.slots_of(0), 1)
+    feed(logs, 10, 300)
+    cluster._route()
+    assert cluster._parked_count <= 8 + cluster.batch_size
+    # routing stopped early: the cursor has not consumed the journal
+    if cluster._migration is not None:
+        assert cluster.cursors["mdt0"] <= logs["mdt0"].last_index + 1
+    seen = set()
+    want = {("mdt0", i) for i in range(1, 301)}
+    drain(cluster, stream, seen, want, forbid_dup=True)
+    assert seen == want
+
+
+# ------------------------------------------------------- shard add / split
+def test_add_shard_under_load_consumer_discovers_it():
+    cluster, logs = mk_cluster(n_producers=2, n_shards=2)
+    stream = connect(cluster).subscribe("g", auto_commit=False)
+    feed(logs, 0, 40)
+    seen = set()
+    want = {(pid, i) for pid in logs for i in range(1, 41)}
+    drain(cluster, stream, seen, want, forbid_dup=True)
+    e0 = cluster.epoch
+    new = cluster.add_shard()
+    assert new == 2
+    assert cluster.epoch == e0 + 1
+    assert cluster.routing.counts(3)[new] == 0   # joins with zero slots
+    cluster.migrate_slots(cluster.routing.slots_of(0)[:10], new)
+    feed(logs, 40, 90)
+    want = {(pid, i) for pid in logs for i in range(1, 91)}
+    drain(cluster, stream, seen, want, forbid_dup=True)
+    assert seen == want
+    assert new in stream.shards          # fan-in re-resolved on the bump
+    assert stream.epoch == cluster.epoch
+    # the new shard never drags the collective ack
+    for log in logs.values():
+        assert log.first_index == log.last_index + 1
+
+
+def test_split_shard_halves_the_most_loaded_shard():
+    cluster, logs = mk_cluster(n_producers=1, n_shards=2)
+    stream = connect(cluster).subscribe("g", auto_commit=False)
+    feed(logs, 0, 50)
+    cluster.pump()
+    before = cluster.routing.counts(2)
+    new = cluster.split_shard()
+    seen = set()
+    want = {("mdt0", i) for i in range(1, 51)}
+    drain(cluster, stream, seen, want, forbid_dup=True)
+    settle(cluster)
+    after = cluster.routing.counts(3)
+    src = before.index(max(before))
+    assert after[new] == max(before) // 2
+    assert after[src] == max(before) - max(before) // 2
+    assert cluster.stats["shards_added"] == 1
+
+
+def test_groups_replicated_to_new_shard_before_records_flow():
+    """The loss window this guards: records offered to a just-added
+    shard before the consumer's fan-in subscribes there must park in
+    the replicated group, not be consumed-and-acked."""
+    cluster, logs = mk_cluster(n_producers=1, n_shards=2)
+    stream = connect(cluster).subscribe("g", auto_commit=False)
+    new = cluster.add_shard()
+    proxy = cluster.shards[new].proxy
+    assert "g" in proxy.groups           # replicated at join time
+    cluster.migrate_slots(cluster.routing.slots_of(0), new)
+    feed(logs, 0, 40)
+    seen = set()
+    want = {("mdt0", i) for i in range(1, 41)}
+    drain(cluster, stream, seen, want, forbid_dup=True)
+    assert seen == want
+
+
+# ------------------------------------------------- forced migration (kill)
+def test_kill_is_a_forced_migration_same_invariant():
+    cluster, logs = mk_cluster(n_producers=2, n_shards=3)
+    stream = connect(cluster).subscribe("g", auto_commit=False)
+    feed(logs, 0, 50, oids=17)
+    cluster.pump()
+    pre = stream.fetch(30)
+    seen = {(pid, i) for pid, b in pre for i in b.indices()}
+    e0 = cluster.epoch
+    cluster.kill_shard(0)
+    assert cluster.epoch == e0 + 1       # reassignment bumped once
+    stream.commit()
+    want = {(pid, i) for pid in logs for i in range(1, 51)}
+    drain(cluster, stream, seen, want)   # dups allowed: at-least-once
+    assert want - seen == set()
+    assert stream.lost == [0]
+    assert cluster.stats["failover_redelivered"] > 0
+    for log in logs.values():
+        assert log.first_index == log.last_index + 1
+
+
+def test_kill_during_migration_cancels_and_loses_nothing():
+    cluster, logs = mk_cluster(n_producers=1, n_shards=3)
+    stream = connect(cluster).subscribe("g", auto_commit=False)
+    feed(logs, 0, 50, oids=23)
+    cluster.pump()
+    cluster.migrate_slots(cluster.routing.slots_of(0), 1)
+    feed(logs, 50, 80, oids=23)
+    cluster._route()                     # park records for draining slots
+    assert cluster._migration is not None
+    pre = stream.fetch(25)
+    seen = {(pid, i) for pid, b in pre for i in b.indices()}
+    cluster.kill_shard(0)                # a migration source dies
+    assert cluster.stats["migrations_cancelled"] == 1
+    assert cluster._migration is None
+    stream.commit()
+    want = {("mdt0", i) for i in range(1, 81)}
+    drain(cluster, stream, seen, want)
+    assert want - seen == set()
+    assert logs["mdt0"].first_index == logs["mdt0"].last_index + 1
+
+
+def test_kill_migration_target_cancels_and_loses_nothing():
+    cluster, logs = mk_cluster(n_producers=1, n_shards=3)
+    stream = connect(cluster).subscribe("g", auto_commit=False)
+    feed(logs, 0, 40, oids=23)
+    cluster.pump()
+    target = 2
+    cluster.migrate_slots(cluster.routing.slots_of(0), target)
+    feed(logs, 40, 60, oids=23)
+    cluster._route()
+    seen = set()
+    cluster.kill_shard(target)
+    assert cluster._migration is None
+    want = {("mdt0", i) for i in range(1, 61)}
+    drain(cluster, stream, seen, want)
+    assert want - seen == set()
+
+
+# ------------------------------------------ interleaving fuzz (satellite 2)
+def _churn_schedule(cluster, logs, stream, ops, feed_per_op=12):
+    """Drive a random interleaving of elastic ops against live traffic;
+    returns (seen set, dup count, whether any kill happened)."""
+    seen, dups, killed = set(), 0, False
+    next_idx = {pid: 1 for pid in logs}
+
+    def emit():
+        for pid, log in logs.items():
+            for _ in range(feed_per_op):
+                log.log(rec(oid=next_idx[pid] % 29,
+                            name=f"{pid}-{next_idx[pid]}".encode()))
+                next_idx[pid] += 1
+
+    def consume():
+        nonlocal dups
+        cluster.pump()
+        for pid, batch in stream.fetch(4096):
+            for i in batch.indices():
+                if (pid, i) in seen:
+                    dups += 1
+                seen.add((pid, i))
+        stream.commit()
+
+    for op, arg in ops:
+        emit()
+        consume()
+        live = [i for i in range(len(cluster.shards)) if cluster.alive[i]]
+        if op == "migrate" and cluster._migration is None and len(live) > 1:
+            src = live[arg % len(live)]
+            dst = live[(arg + 1) % len(live)]
+            slots = cluster.routing.slots_of(src)
+            if slots and src != dst:
+                cluster.migrate_slots(slots[:max(1, len(slots) // 2)], dst)
+        elif op == "add":
+            if len(cluster.shards) < 6:
+                cluster.add_shard()
+        elif op == "kill" and len(live) > 1:
+            victim = live[arg % len(live)]
+            cluster.kill_shard(victim)
+            killed = True
+        consume()
+    want = {(pid, i) for pid in logs for i in range(1, next_idx[pid])}
+    for _ in range(300):
+        cluster.pump()
+        moved = 0
+        for pid, batch in stream.fetch(4096):
+            for i in batch.indices():
+                if (pid, i) in seen:
+                    dups += 1
+                seen.add((pid, i))
+            moved += len(batch)
+        stream.commit()
+        if not moved and seen >= want:
+            break
+    return seen, want, dups, killed
+
+
+def _check_schedule(ops):
+    logs = {"mdt0": Llog("mdt0"), "mdt1": Llog("mdt1")}
+    cluster = LcapCluster(logs, n_shards=3)
+    stream = connect(cluster).subscribe("g", auto_commit=False)
+    seen, want, dups, killed = _churn_schedule(cluster, logs, stream, ops)
+    assert want - seen == set(), f"lost {len(want - seen)} records"
+    if not killed:
+        assert dups == 0, f"{dups} duplicates without any shard death"
+    # per-target cr_prev order survives the churn: indices of one
+    # target arrive in journal order on whichever shard owns it
+    order = {}
+    for pid, i in sorted(seen):
+        order.setdefault(pid, []).append(i)
+    for pid, idxs in order.items():
+        assert idxs == sorted(idxs)
+    for log in logs.values():
+        assert log.first_index == log.last_index + 1
+
+
+OPS = ("migrate", "add", "kill", "none")
+
+
+def test_fuzz_random_churn_interleavings_seeded():
+    for seed in range(6):
+        rng = random.Random(0xE19 + seed)
+        ops = [(rng.choice(OPS), rng.randrange(6)) for _ in range(7)]
+        _check_schedule(ops)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(OPS), st.integers(0, 5)),
+                    min_size=1, max_size=8))
+    def test_fuzz_random_churn_interleavings_hypothesis(ops):
+        _check_schedule(ops)
+
+
+# ------------------------------------------------ wire-path epoch discovery
+def test_tcp_fan_in_sees_epoch_bump_and_reresolves():
+    """Satellite 3: a live TCP consumer mid-iteration observes the
+    shard-set change (piggybacked epoch), opens a child on the new
+    daemon, and cursor/commit routing lands on the new owner — no
+    restart."""
+    logs = {"p0": Llog("p0"), "p1": Llog("p1")}
+    cluster = LcapCluster(logs, n_shards=2)
+    svc = LcapClusterService(cluster).start()
+    try:
+        sess = connect(svc)
+        stream = sess.subscribe(Subscription(group="g", auto_commit=False))
+        assert sorted(stream.shards) == [0, 1]
+        e0 = stream.epoch
+        feed(logs, 0, 30, oids=9)
+        seen = set()
+        deadline = time.time() + 15
+        while time.time() < deadline and len(seen) < 60:
+            for pid, batch in stream.fetch(4096):
+                seen.update((pid, i) for i in batch.indices())
+            stream.commit()
+            time.sleep(0.002)
+        assert len(seen) == 60
+        new = svc.add_shard()            # grow the daemon set live
+        with cluster._lock:
+            cluster.migrate_slots(cluster.routing.slots_of(0)[:20], new)
+        feed(logs, 30, 70, oids=9)
+        deadline = time.time() + 20
+        while time.time() < deadline and len(seen) < 140:
+            for pid, batch in stream.fetch(4096):
+                seen.update((pid, i) for i in batch.indices())
+            stream.commit()
+            time.sleep(0.002)
+        assert len(seen) == 140
+        assert stream.epoch > e0         # bump observed on the wire
+        assert new in stream.shards      # child opened on the new daemon
+        child = dict(stream._children)[new]
+        assert child.cursors             # commits route to the new owner
+        for log in logs.values():
+            deadline = time.time() + 10
+            while (time.time() < deadline
+                   and log.first_index != log.last_index + 1):
+                time.sleep(0.005)
+            assert log.first_index == log.last_index + 1
+        sess.close()
+    finally:
+        svc.stop()
+
+
+def test_topology_verb_served_by_every_shard():
+    logs = {"p": Llog("p")}
+    cluster = LcapCluster(logs, n_shards=2)
+    svc = LcapClusterService(cluster).start()
+    try:
+        sess = connect(list(svc.addresses))   # raw addresses, no callable
+        stream = sess.subscribe(Subscription(group="g", auto_commit=False))
+        topo = sess._topology_snapshot()
+        assert topo is not None
+        assert topo["shards"] == 2 and len(topo["addresses"]) == 2
+        # raw-address clients also discover growth, via the verb
+        new = svc.add_shard()
+        feed(logs, 0, 10)
+        deadline = time.time() + 10
+        while time.time() < deadline and new not in stream.shards:
+            stream.fetch(4096)
+            stream.commit()
+            time.sleep(0.005)
+        assert new in stream.shards
+        sess.close()
+    finally:
+        svc.stop()
+
+
+# --------------------------------------------- durable resume across churn
+def test_parked_durable_resumes_onto_migrated_slots():
+    """Satellite 3b: a durable consumer parks, the cluster migrates and
+    grows, and resume lands on the *new* topology — parked state where
+    it exists, fresh attach on shards that joined while it was away."""
+    logs = {"p": Llog("p")}
+    cluster = LcapCluster(logs, n_shards=2)
+    sess = connect(cluster)
+    st = sess.subscribe("g", name="worker-1", auto_commit=False)
+    feed(logs, 0, 20, oids=7)
+    cluster.pump()
+    got = {("p", i) for _, b in st.fetch(4096) for i in b.indices()}
+    st.commit()
+    st.detach()                          # park on both shards
+    cluster.migrate_slots(cluster.routing.slots_of(0)[:10], 1)
+    settle(cluster)
+    new = cluster.add_shard()
+    cluster.migrate_slots(cluster.routing.slots_of(1)[:10], new)
+    settle(cluster)
+    feed(logs, 20, 40, oids=7)
+    cluster.pump()
+    st2 = sess.resume("g", "worker-1", auto_commit=False)
+    assert st2.resumed
+    assert new in st2.shards             # fresh attach on the young shard
+    seen = set(got)
+    want = {("p", i) for i in range(1, 41)}
+    drain(cluster, stream=st2, seen=seen, want=want)
+    assert seen == want
+
+
+def test_cluster_resume_raises_only_when_no_shard_has_state():
+    cluster, logs = mk_cluster(n_producers=1, n_shards=2)
+    sess = connect(cluster)
+    from repro.core.errors import UnknownConsumerError
+    with pytest.raises(UnknownConsumerError):
+        sess.resume("g", "never-existed")
+
+
+# --------------------------------------------------- retention (satellites)
+def test_janitor_trims_history_behind_live_cursors():
+    logs = {"q": Llog("q", history=True)}
+    cluster = LcapCluster(logs, n_shards=2)
+    stream = connect(cluster).subscribe("g", auto_commit=False)
+    feed(logs, 0, 300, oids=31)
+    seen = set()
+    want = {("q", i) for i in range(1, 301)}
+    drain(cluster, stream, seen, want, forbid_dup=True)
+    hist = logs["q"].history
+    assert hist.covered_lo == 1
+    jan = StreamJanitor(cluster, floor=64)
+    out = jan.sweep()
+    assert out["q"]["dropped"] > 0
+    assert hist.covered_lo == out["q"]["horizon"]
+    assert jan.stats["sweeps"] == 1
+    assert jan.stats["records_dropped"] == out["q"]["dropped"]
+    # idempotent: nothing moved, nothing more trimmed
+    assert jan.sweep()["q"]["dropped"] == 0
+    # replay=True after the trim clamps to the retained floor
+    st2 = connect(cluster).subscribe("g2", replay=True, auto_commit=False)
+    got = set()
+    for _ in range(200):
+        cluster.pump()
+        moved = 0
+        for pid, batch in st2.fetch(4096):
+            got.update(batch.indices())
+            moved += len(batch)
+        st2.commit()
+        if not moved and not st2.replaying:
+            break
+    assert got and min(got) == out["q"]["horizon"]
+
+
+def test_janitor_floor_keeps_a_tail_even_when_fully_acked():
+    logs = {"q": Llog("q", history=True)}
+    cluster = LcapCluster(logs, n_shards=1)
+    stream = connect(cluster).subscribe("g", auto_commit=False)
+    feed(logs, 0, 100)
+    seen = set()
+    drain(cluster, stream, seen, {("q", i) for i in range(1, 101)},
+          forbid_dup=True)
+    jan = StreamJanitor(cluster, floor=40)
+    jan.sweep()
+    hist = logs["q"].history
+    assert hist.covered_hi - hist.covered_lo + 1 >= 40
+
+
+def test_retention_horizon_held_back_by_replay_and_migration():
+    logs = {"q": Llog("q", history=True)}
+    cluster = LcapCluster(logs, n_shards=2)
+    stream = connect(cluster).subscribe("g", auto_commit=False)
+    feed(logs, 0, 120, oids=31)
+    seen = set()
+    drain(cluster, stream, seen, {("q", i) for i in range(1, 121)},
+          forbid_dup=True)
+    # an unfinished replay bootstrap pins the horizon at its rewind
+    st2 = connect(cluster).subscribe("g2", replay=True, auto_commit=False)
+    cluster.pump()
+    h = cluster.retention_horizons()
+    assert h["q"] == 1                   # replay_lo of the bootstrap
+    # an in-flight migration pins the horizon at its handoff
+    feed(logs, 120, 140, oids=31)
+    cluster.pump()
+    pre = stream.fetch(5)
+    cluster.migrate_slots(cluster.routing.slots_of(0), 1)
+    if cluster._migration is not None:
+        h2 = cluster.retention_horizons()
+        handoff = min(cluster._migration.handoff.values())
+        assert h2["q"] <= handoff + 1
+    seen.update((pid, i) for pid, b in pre for i in b.indices())
+    stream.commit()
+    # drain BOTH groups: g2's acks gate the collective watermark (and
+    # with it the migration handoff), so it must keep consuming — a
+    # stalled persistent group is exactly what holds retention back
+    want = {("q", i) for i in range(1, 141)}
+    got2 = set()
+    for _ in range(400):
+        cluster.pump()
+        moved = 0
+        for pid, batch in stream.fetch(4096):
+            seen.update((pid, i) for i in batch.indices())
+            moved += len(batch)
+        stream.commit()
+        for pid, batch in st2.fetch(4096):
+            got2.update((pid, i) for i in batch.indices())
+            moved += len(batch)
+        st2.commit()
+        if not moved and seen >= want and got2 >= want \
+                and not st2.replaying:
+            break
+    assert seen >= want
+    assert got2 >= want
+    # with both consumers caught up and the migration settled, nothing
+    # pins the horizon any more
+    settle(cluster)
+    assert cluster._migration is None
+    assert cluster.retention_horizons()["q"] > 1
+
+
+# ----------------------------------------------------------- observability
+def test_epoch_and_migration_gauges_exported():
+    from repro.obs.registry import MetricsRegistry
+    cluster, logs = mk_cluster(n_producers=1, n_shards=2)
+    reg = MetricsRegistry()
+    cluster.attach_registry(reg)
+    stream = connect(cluster).subscribe("g", auto_commit=False)
+    feed(logs, 0, 30)
+    seen = set()
+    drain(cluster, stream, seen, {("mdt0", i) for i in range(1, 31)},
+          forbid_dup=True)
+    cluster.migrate_slots(cluster.routing.slots_of(0)[:8], 1)
+    snap = reg.snapshot()
+    assert snap["lcap_routing_epoch"]["samples"][0][1] == cluster.epoch
+    owned = {s[0].get("shard"): s[1]
+             for s in snap["lcap_shard_slots_owned"]["samples"]}
+    assert sum(owned.values()) == cluster.n_slots
+    lag = snap["lcap_shard_dispatch_lag"]["samples"]
+    assert {s[0].get("shard") for s in lag} == {"0", "1"}
+    if cluster._migration is not None:
+        assert snap["lcap_migration_in_flight"]["samples"][0][1] == 1
+    settle(cluster)
+    snap = reg.snapshot()
+    assert snap["lcap_migration_in_flight"]["samples"][0][1] == 0
+
+
+def test_autoscale_signals_per_live_shard():
+    cluster, logs = mk_cluster(n_producers=1, n_shards=2)
+    connect(cluster).subscribe("g", auto_commit=False)
+    feed(logs, 0, 20)
+    cluster._route()                     # routed but not yet dispatched
+    sig = cluster.autoscale_signals()
+    assert set(sig) == {"0", "1"}
+    for ent in sig.values():
+        assert set(ent) == {"offer_queue_depth", "dispatch_lag",
+                            "slots_owned"}
+    assert sum(e["slots_owned"] for e in sig.values()) == cluster.n_slots
+    assert sum(e["dispatch_lag"] for e in sig.values()) > 0
+    cluster.kill_shard(0)
+    assert set(cluster.autoscale_signals()) == {"1"}
