@@ -1,0 +1,256 @@
+"""Federated multi-tenant plane: scoping overhead + fan-in integrity.
+
+Two measurements, two smoke gates:
+
+1. **Tenant-scoping pushdown cost.**  The columnar dispatch drain
+   (``bench_proxy``'s ``run_columnar`` shape) runs twice on the same
+   workload: once with a plain group, once with the group scoped to a
+   ``TenantPrincipal`` whose prefix covers *every* record — so both
+   runs deliver identical records and the delta is purely the pushdown
+   predicate (jobid-column compares + the per-tenant eligibility
+   partition + quota accounting).  ``--smoke`` fails when the scoped
+   run is more than {MAX_OVERHEAD_PCT}% slower.  A mixed two-tenant run
+   (half the records out of scope) is reported informationally.
+
+2. **Federation fan-in integrity.**  Two 2-shard clusters federated
+   under one ``FederatedStream``; every (origin, producer, index)
+   triple must arrive exactly once, with the right origin stamp.
+   ``--smoke`` fails on any loss or duplication.
+
+Writes BENCH_federation.json (consumed by CI as an artifact).
+
+Run:  PYTHONPATH=src python benchmarks/bench_federation.py
+      PYTHONPATH=src python benchmarks/bench_federation.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import records as R                       # noqa: E402
+from repro.core.cluster import LcapCluster                # noqa: E402
+from repro.core.federation import Federation              # noqa: E402
+from repro.core.llog import Llog                          # noqa: E402
+from repro.core.proxy import LcapProxy                    # noqa: E402
+from repro.core.session import Subscription, connect      # noqa: E402
+from repro.core.tenancy import TenantPrincipal            # noqa: E402
+
+#: smoke gate: tenant scoping may cost at most this much dispatch
+#: throughput vs the paired unscoped run
+MAX_OVERHEAD_PCT = 10.0
+
+FLAGS = R.CLF_JOBID | R.CLF_SHARD | R.CLF_METRICS
+T0 = 1_700_000_000_000_000_000
+
+
+def fill_logs(n_producers: int) -> Dict[str, Llog]:
+    return {f"mdt{p}": Llog(f"mdt{p}") for p in range(n_producers)}
+
+
+def feed(logs: Dict[str, Llog], per: int, two_tenants: bool = False) -> int:
+    """Jobid-bearing stream: 8 jobids under one tenant prefix, or an
+    even split across two tenant prefixes for the mixed run."""
+    n = 0
+    for p, log in enumerate(logs.values()):
+        for i in range(per):
+            pre = b"acme" if (not two_tenants or i % 2) else b"evil"
+            log.log(R.ChangelogRecord(
+                type=R.CL_CREATE if i % 3 else R.CL_CLOSE,
+                tfid=R.Fid(1, i, 0), pfid=R.Fid(1, 0, 0),
+                name=b"f%08d" % i, jobid=b"%s.job-%d" % (pre, i % 8),
+                shard=(0, p, 0, 0),
+                metrics=(float(i % 100),) if i % 2 else None,
+                time=T0 + i * 50_000))
+            n += 1
+    return n
+
+
+def run_drain(n_producers: int, total_records: int,
+              tenant: TenantPrincipal = None,
+              two_tenants: bool = False) -> dict:
+    logs = fill_logs(n_producers)
+    proxy = LcapProxy(logs, batch_size=4096, outbox_cap=1 << 22)
+    cid = proxy.attach("bench", flags=FLAGS, tenant=tenant)["cid"]
+    total = feed(logs, total_records // n_producers, two_tenants)
+    expect = total if not two_tenants else total // 2
+
+    t0 = time.perf_counter()
+    done = 0
+    while done < expect:
+        moved = proxy.pump()
+        while True:
+            batches = proxy.fetch_batches(cid, 1 << 30)
+            if not batches:
+                break
+            for pid, batch in batches:
+                proxy.commit(cid, {pid: batch.indices()})
+                done += len(batch)
+        if not moved:
+            proxy.flush_upstream()
+    elapsed = time.perf_counter() - t0
+
+    proxy.flush_upstream()
+    assert done == expect, f"delivered {done}, expected {expect}"
+    assert all(log.first_index == log.last_index + 1
+               for log in logs.values()), "journals not trimmed"
+    return {"records": total, "delivered": done, "seconds": elapsed,
+            "records_per_sec": total / elapsed,
+            "tenant_filtered": proxy.stats["tenant_filtered"]}
+
+
+def measure_scoping(n_producers: int, total_records: int,
+                    reps: int = 3) -> dict:
+    """Paired runs: bare vs all-in-scope tenant (identical delivery —
+    the overhead is the predicate), plus the mixed informational run.
+    Each arm keeps its best of ``reps`` runs — the drain is a few ms,
+    so a single scheduler stall would otherwise dominate the ratio."""
+    covers_all = TenantPrincipal("acme", prefixes=[b"acme."])
+    pairs = []
+    for _ in range(reps):
+        # interleave the arms so slow machine-state drift (turbo,
+        # noisy neighbors) hits both sides of the ratio alike
+        pairs.append((run_drain(n_producers, total_records),
+                      run_drain(n_producers, total_records,
+                                tenant=covers_all),
+                      run_drain(n_producers, total_records,
+                                tenant=covers_all, two_tenants=True)))
+    best = lambda runs: min(runs, key=lambda r: r["seconds"])  # noqa: E731
+    base = best([p[0] for p in pairs])
+    scoped = best([p[1] for p in pairs])
+    mixed = best([p[2] for p in pairs])
+    # gate on the smallest *paired* delta: a real regression shows in
+    # every clean pair, while a scheduler stall corrupts only the pair
+    # it lands in.  The median pair is the honest headline estimate.
+    deltas = sorted((1.0 - s["records_per_sec"] / b["records_per_sec"])
+                    * 100 for b, s, _ in pairs)
+    return {"baseline": base, "scoped": scoped, "mixed": mixed,
+            "overhead_pct": round(deltas[len(deltas) // 2], 2),
+            "overhead_pct_gate": round(deltas[0], 2)}
+
+
+def run_fan_in(per_producer: int) -> dict:
+    """Two 2-shard clusters federated; exact-once delivery with origin
+    stamps is the gate, throughput the headline number."""
+    logs_a = {"fs0-p0": Llog("fs0-p0"), "fs0-p1": Llog("fs0-p1")}
+    logs_b = {"fs1-p0": Llog("fs1-p0"), "fs1-p1": Llog("fs1-p1")}
+    ca = LcapCluster(logs_a, n_shards=2, batch_size=4096)
+    cb = LcapCluster(logs_b, n_shards=2, batch_size=4096)
+    fed = Federation({"fs0": ca, "fs1": cb})
+    stream = fed.subscribe(Subscription(group="fan", auto_commit=False,
+                                        flags=FLAGS))
+    total = 0
+    for logs in (logs_a, logs_b):
+        total += feed(logs, per_producer)
+
+    t0 = time.perf_counter()
+    seen: Dict[tuple, int] = {}
+    misstamped = 0
+    idle = 0
+    while idle < 5:
+        moved = fed.pump()
+        got = 0
+        for origin, pid, batch in stream.fetch(1 << 30):
+            if batch.origin != origin or not pid.startswith(origin):
+                misstamped += len(batch)
+            for ix in batch.indices():
+                key = (origin, pid, ix)
+                seen[key] = seen.get(key, 0) + 1
+            got += len(batch)
+        stream.commit()
+        idle = 0 if (moved or got) else idle + 1
+    elapsed = time.perf_counter() - t0
+
+    dup = sum(c - 1 for c in seen.values() if c > 1)
+    fed.close()
+    ca.close()
+    cb.close()
+    return {"records": total, "seconds": elapsed,
+            "records_per_sec": total / elapsed,
+            "delivered_unique": len(seen), "lost": total - len(seen),
+            "duplicated": dup, "misstamped": misstamped,
+            "clean": len(seen) == total and not dup and not misstamped}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__.format(MAX_OVERHEAD_PCT=MAX_OVERHEAD_PCT))
+    ap.add_argument("--records", type=int, default=64_000,
+                    help="total records per topology")
+    ap.add_argument("--producers", type=int, nargs="+", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI workload; exit 1 when tenant "
+                         f"scoping costs > {MAX_OVERHEAD_PCT}% dispatch "
+                         "throughput or federation fan-in loses or "
+                         "duplicates any record")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_federation.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        # not smaller: the paired drain is a few tens of ms, and the
+        # overhead ratio needs enough work per run to ride out
+        # scheduler noise on a shared CI runner
+        args.records = min(args.records, 60_000)
+        producers = args.producers or [1, 4]
+    else:
+        producers = args.producers or [1, 4, 16]
+
+    results = {}
+    for n in producers:
+        r = measure_scoping(n, args.records)
+        if args.smoke and r["overhead_pct_gate"] > MAX_OVERHEAD_PCT:
+            # one retry: a shared CI runner can stall a single paired
+            # measurement; a real regression fails both
+            r2 = measure_scoping(n, args.records)
+            if r2["overhead_pct_gate"] < r["overhead_pct_gate"]:
+                r = r2
+        results[str(n)] = r
+        print(f"producers={n:3d}  "
+              f"bare={r['baseline']['records_per_sec']:>12,.0f} rec/s  "
+              f"scoped={r['scoped']['records_per_sec']:>12,.0f} rec/s  "
+              f"overhead={r['overhead_pct']:+.2f}%  "
+              f"mixed={r['mixed']['records_per_sec']:>12,.0f} rec/s "
+              f"(filtered {r['mixed']['tenant_filtered']:,})")
+
+    fan = run_fan_in(args.records // 4)
+    print(f"fan-in    {fan['records_per_sec']:>12,.0f} rec/s  "
+          f"unique={fan['delivered_unique']:,}/{fan['records']:,}  "
+          f"lost={fan['lost']}  dup={fan['duplicated']}  "
+          f"misstamped={fan['misstamped']}")
+
+    payload = {
+        "benchmark": "tenant-scoping pushdown overhead + federation "
+                     "fan-in integrity",
+        "unit": "records/sec",
+        "flags": "CLF_JOBID|CLF_SHARD|CLF_METRICS",
+        "total_records": args.records,
+        "scoping": results,
+        "fan_in": fan,
+        "max_overhead_pct": max(r["overhead_pct_gate"]
+                                for r in results.values()),
+        "fan_in_clean": fan["clean"],
+    }
+    with open(args.out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"wrote {os.path.abspath(args.out)}")
+    if args.smoke and payload["max_overhead_pct"] > MAX_OVERHEAD_PCT:
+        print(f"SMOKE FAIL: tenant scoping costs "
+              f"{payload['max_overhead_pct']:.2f}% > {MAX_OVERHEAD_PCT}% "
+              f"dispatch throughput — the pushdown leaked onto the "
+              f"unscoped hot path")
+        sys.exit(1)
+    if args.smoke and not fan["clean"]:
+        print(f"SMOKE FAIL: federation fan-in lost {fan['lost']} / "
+              f"duplicated {fan['duplicated']} / misstamped "
+              f"{fan['misstamped']} records")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,8 @@ from .ack import AckTracker
 from .cluster import (LcapCluster, LcapClusterService, LocalShard,
                       RemoteShard, fid_slot)
 from .errors import (ClusterError, SessionError, SubscriptionError,
-                     UnknownConsumerError, UnknownProducerError)
+                     TenantError, UnknownConsumerError, UnknownProducerError)
+from .federation import Federation, FederatedStream, GlobalCursor
 from .history import (Compactor, HistoryStore, JournalReplayReader,
                       StreamJanitor)
 from .llog import Llog
@@ -25,6 +26,7 @@ from .routing import RoutingTable
 from .server import LcapService
 from .session import (ClusterSession, FanInStream, Session, Stream,
                       Subscription, connect)
+from .tenancy import TenantAccount, TenantPrincipal, TokenBucket
 
 __all__ = [
     "records", "RecordBatch", "AckTracker", "Llog", "LcapProxy",
@@ -34,8 +36,10 @@ __all__ = [
     "fid_slot", "RoutingTable",
     "connect", "Session", "Stream", "Subscription",
     "ClusterSession", "FanInStream",
+    "Federation", "FederatedStream", "GlobalCursor",
+    "TenantPrincipal", "TenantAccount", "TokenBucket",
     "SessionError", "SubscriptionError", "UnknownConsumerError",
-    "UnknownProducerError", "ClusterError",
+    "UnknownProducerError", "ClusterError", "TenantError",
     "LocalReader", "RemoteReader",        # deprecated shims
     "CancelCompensating", "CoalesceHeartbeats", "ReorderByTarget",
     "TypeFilter",

@@ -108,7 +108,15 @@ def fid_slots(seq: np.ndarray, oid: np.ndarray, ver: np.ndarray,
                 % np.uint64(n_slots)).astype(np.int64)
 
 
-def _jax_fid_slots():
+#: memoized result of the REPRO_JAX_ROUTING probe — resolved once at
+#: first ``batch_slots`` call (the probe re-read os.environ and
+#: re-attempted the stream_ops import per call, on the routing hot
+#: path); ``_reset_jax_probe`` re-arms it for tests
+_JAX_UNRESOLVED = object()
+_jax_kernel = _JAX_UNRESOLVED
+
+
+def _resolve_jax_fid_slots():
     """The accelerator twin of ``fid_slots`` when the deployment opts
     in (``REPRO_JAX_ROUTING=1``) and jax imports; None otherwise.  The
     numpy path stays the default: on a CPU-only coordinator the jit
@@ -120,6 +128,20 @@ def _jax_fid_slots():
     except Exception:
         return None
     return stream_ops.fid_slots
+
+
+def _jax_fid_slots():
+    global _jax_kernel
+    if _jax_kernel is _JAX_UNRESOLVED:
+        _jax_kernel = _resolve_jax_fid_slots()
+    return _jax_kernel
+
+
+def _reset_jax_probe() -> None:
+    """Forget the memoized probe result (test hook: lets a test flip
+    ``REPRO_JAX_ROUTING`` and have the next ``batch_slots`` re-probe)."""
+    global _jax_kernel
+    _jax_kernel = _JAX_UNRESOLVED
 
 
 def batch_slots(batch: "R.RecordBatch",
@@ -915,6 +937,17 @@ class LcapCluster:
                             h = min(h, floor)
                 out[pid] = h
             return out
+
+    def set_tenant_quota(self, tenant: str, **kw) -> None:
+        """Install per-tenant delivery token buckets on every live
+        in-process shard (see ``LcapProxy.set_tenant_quota``).  The
+        rates apply *per shard* — a cluster-wide budget divides by the
+        shard count at the caller."""
+        with self._lock:
+            for i, shard in enumerate(self.shards):
+                proxy = getattr(shard, "proxy", None)
+                if self.alive[i] and proxy is not None:
+                    proxy.set_tenant_quota(tenant, **kw)
 
     def metrics(self) -> Dict[str, dict]:
         """One cluster snapshot: every live shard's registry snapshot

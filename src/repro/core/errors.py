@@ -41,6 +41,15 @@ class ClusterError(SessionError):
     rejected, or a malformed cluster topology)."""
 
 
+class TenantError(SessionError, PermissionError):
+    """A tenant-scope violation: a subscription tried to widen (or take
+    over) a scope it does not own — resuming another tenant's durable
+    cursor, broadening a parked tenant scope, or a malformed
+    ``TenantPrincipal``.  Scope *enforcement* never raises: out-of-scope
+    records are silently acknowledged in place by the proxy (pushdown),
+    exactly like op-type filtering."""
+
+
 #: reply ``err_type`` -> exception class (legacy names map onto the
 #: closest typed error so old servers still produce typed failures)
 WIRE_ERRORS: Dict[str, Type[SessionError]] = {
@@ -49,6 +58,7 @@ WIRE_ERRORS: Dict[str, Type[SessionError]] = {
     "UnknownConsumerError": UnknownConsumerError,
     "UnknownProducerError": UnknownProducerError,
     "ClusterError": ClusterError,
+    "TenantError": TenantError,
     "KeyError": UnknownConsumerError,
     "ValueError": SubscriptionError,
 }

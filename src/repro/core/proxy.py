@@ -66,10 +66,11 @@ import numpy as np
 
 from . import records as R
 from .ack import AckTracker
-from .errors import (SubscriptionError, UnknownConsumerError,
+from .errors import (SubscriptionError, TenantError, UnknownConsumerError,
                      UnknownProducerError)
 from .history import JournalReplayReader
 from .llog import Llog
+from .tenancy import TenantAccount, TenantPrincipal
 
 Module = Callable[[R.RecordBatch], R.RecordBatch]
 
@@ -288,13 +289,20 @@ class _InFlight:
 class Consumer:
     def __init__(self, cid: str, group: Optional[str], flags: int, mode: str,
                  types: Optional[Iterable[int]] = None,
-                 name: Optional[str] = None):
+                 name: Optional[str] = None,
+                 tenant: Optional[TenantPrincipal] = None):
         self.cid = cid
         self.group = group
         self.flags = R.normalize_flags(flags)
         self.mode = mode
         self.types = frozenset(types) if types is not None else None
         self.name = name                     # durable identity within group
+        #: visibility scope; None = trusted unscoped consumer.  Scope is
+        #: enforced at dispatch exactly like the op-type mask (pushdown)
+        self.tenant = tenant
+        #: the proxy's per-tenant accounting record (quota buckets,
+        #: delivered counters); installed at attach, shared per tenant
+        self.account: Optional[TenantAccount] = None
         self.outbox = _Outbox()
         # (producer, index) -> packed record, for redelivery
         self.in_flight = _InFlight()
@@ -368,7 +376,10 @@ class LcapProxy:
                       "ephemeral_drops": 0, "batches_ingested": 0,
                       "filtered_out": 0, "parked": 0, "resumed": 0,
                       "resume_replayed": 0, "parks_expired": 0,
-                      "replayed": 0}
+                      "replayed": 0, "tenant_filtered": 0}
+        #: tenant name -> TenantAccount (quota buckets + delivery
+        #: counters), created lazily on first attach or set_tenant_quota
+        self.tenants: Dict[str, TenantAccount] = {}
         # observability plane (attach_registry): None until attached, so
         # the hot path pays a single identity check when unused
         self._obs = None
@@ -473,18 +484,20 @@ class LcapProxy:
     def subscribe(self, group: Optional[str], flags: Optional[int] = None,
                   mode: str = PERSISTENT, cid: Optional[str] = None,
                   types: Optional[Iterable[int]] = None,
-                  name: Optional[str] = None) -> str:
+                  name: Optional[str] = None,
+                  tenant: Optional[TenantPrincipal] = None) -> str:
         """Register a consumer; returns its cid.  See ``attach`` for the
         full subscription contract (this is the thin historical form)."""
         return self.attach(group, flags=flags, mode=mode, cid=cid,
-                           types=types, name=name)["cid"]
+                           types=types, name=name, tenant=tenant)["cid"]
 
     def attach(self, group: Optional[str], flags: Optional[int] = None,
                mode: str = PERSISTENT, cid: Optional[str] = None,
                types: Optional[Iterable[int]] = None,
                name: Optional[str] = None,
                resume: Optional[bool] = None,
-               replay: Optional[object] = None) -> Dict:
+               replay: Optional[object] = None,
+               tenant: Optional[TenantPrincipal] = None) -> Dict:
         """Register a consumer and return ``{"cid", "resumed", "token"}``.
 
         Persistent consumers name a group and share its stream; ephemeral
@@ -512,7 +525,16 @@ class LcapProxy:
         history source and, for persistent mode, a *fresh* group (a
         group with existing delivery state already consumed part of the
         stream and would double-apply it).
+
+        ``tenant`` scopes the consumer to a ``TenantPrincipal``: only
+        records whose jobid matches the tenant's scope are ever
+        delivered (live, replay, redelivery, resume); everything else
+        is acknowledged in place server-side, like the type mask.  A
+        durable consumer's tenant parks with it — resuming under a
+        *different* tenant (or dropping a parked tenant) raises
+        ``TenantError``.
         """
+        tenant = TenantPrincipal.from_wire(tenant)
         with self._lock:
             self._expire_parked_locked()
             if resume and not name:
@@ -546,20 +568,23 @@ class LcapProxy:
                                 f"durable consumer {group}/{name} has "
                                 f"parked state; resume or forget it first")
                         return self._resume_locked(grp, name, cid, flags,
-                                                   types)
+                                                   types, tenant)
                 if resume:
                     raise UnknownConsumerError(
                         f"no parked state for durable consumer "
                         f"{group}/{name!r}")
                 cons = Consumer(cid, group, flags, mode, types=types,
-                                name=name)
+                                name=name, tenant=tenant)
+                self._bind_tenant(cons)
                 self._join_group(grp, cons)
                 self._flush_upstream_locked()   # drain may ack in place
             elif mode == EPHEMERAL:
                 if name:
                     raise SubscriptionError("ephemeral consumers cannot be "
                                             "durable")
-                cons = Consumer(cid, None, flags, mode, types=types)
+                cons = Consumer(cid, None, flags, mode, types=types,
+                                tenant=tenant)
+                self._bind_tenant(cons)
                 # connection point: nothing *emitted* before now (§IV-B).
                 # Producer last_index, not the ingest cursor — records
                 # journaled but not yet pumped at attach time are
@@ -597,8 +622,25 @@ class LcapProxy:
 
     def _resume_locked(self, grp: Group, name: str, cid: str,
                        flags: Optional[int],
-                       types: Optional[Iterable[int]]) -> Dict:
-        old, _deadline = grp.parked.pop(name)
+                       types: Optional[Iterable[int]],
+                       tenant: Optional[TenantPrincipal] = None) -> Dict:
+        old = grp.parked[name][0]
+        # tenant identity is part of the durable cursor: a bare resume
+        # inherits the parked tenant, but a *different* principal can
+        # never take over the cursor, and a parked scope can never be
+        # widened by resuming with a different one — that would hand
+        # one tenant another tenant's in-flight records
+        if old.tenant is not None and tenant is not None \
+                and tenant != old.tenant:
+            raise TenantError(
+                f"durable consumer {grp.name}/{name} is owned by tenant "
+                f"{old.tenant.name!r}; cannot resume as {tenant.name!r}")
+        if old.tenant is None and tenant is not None:
+            raise TenantError(
+                f"durable consumer {grp.name}/{name} parked unscoped; "
+                f"resuming it under tenant {tenant.name!r} would "
+                f"re-scope another identity's cursor")
+        grp.parked.pop(name)
         # the parked subscription spec is the default: a bare
         # resume(group, name) keeps the filters the consumer declared;
         # passing flags/types explicitly overrides them
@@ -606,7 +648,8 @@ class LcapProxy:
                         old.flags if flags is None else flags,
                         PERSISTENT,
                         types=old.types if types is None else types,
-                        name=name)
+                        name=name, tenant=old.tenant)
+        self._bind_tenant(cons)
         cons.acked_hi = old.acked_hi
         # an interrupted replay bootstrap continues where it stopped
         cons.replay_src = old.replay_src
@@ -781,6 +824,8 @@ class LcapProxy:
         cons.outbox.append((pid, idx, out))
         cons.in_flight[(pid, idx)] = buf
         cons.delivered += 1
+        if cons.account is not None:
+            cons.account.charge(1, len(buf))
         self.stats["dispatched"] += 1
 
     def _dispatch_to_group(self, grp: Group, pid: str, idx: int,
@@ -791,6 +836,13 @@ class LcapProxy:
             grp.pending.append((pid, idx, buf))
             return
         want = [m for m in live if m.wants(R.packed_type(buf))]
+        if want and any(m.tenant is not None for m in want):
+            jb = R.packed_jobid(buf)
+            kept = [m for m in want
+                    if m.tenant is None or m.tenant.allows(jb)]
+            if not kept and want:
+                self.stats["tenant_filtered"] += 1
+            want = kept
         if not want:                             # pushdown: nobody asked
             grp.tracker(pid).ack(idx)
             self.stats["filtered_out"] += 1
@@ -802,6 +854,47 @@ class LcapProxy:
         cap = self.outbox_cap
         return any(len(m.outbox) >= cap
                    for m in grp.members.values() if m.alive)
+
+    # ------------------------------------------------------------- tenancy
+    def _bind_tenant(self, cons: Consumer) -> None:
+        """Point the consumer at its tenant's shared accounting record
+        (created on first sight) so the hot path charges quota with one
+        attribute read instead of a dict lookup."""
+        if cons.tenant is not None:
+            cons.account = self.tenants.setdefault(
+                cons.tenant.name, TenantAccount(cons.tenant.name))
+
+    def set_tenant_quota(self, tenant: str,
+                         records_per_s: Optional[float] = None,
+                         bytes_per_s: Optional[float] = None,
+                         burst_records: Optional[float] = None,
+                         burst_bytes: Optional[float] = None) -> None:
+        """Install (or clear, with both rates None) delivery token
+        buckets for ``tenant``.  An over-quota tenant's groups park
+        through the per-group backpressure path and resume as the
+        buckets refill — records are delayed, never lost."""
+        with self._lock:
+            acct = self.tenants.setdefault(tenant, TenantAccount(tenant))
+            acct.set_quota(records_per_s, bytes_per_s,
+                           burst_records, burst_bytes)
+
+    def _quota_blocked(self, grp: Group) -> bool:
+        """True when any live member's tenant has an exhausted bucket:
+        the whole group parks (backpressure is per group, and a group
+        is one logical subscriber)."""
+        for m in grp.members.values():
+            if m.alive and m.account is not None and m.account.exhausted:
+                return True
+        return False
+
+    def _blocked(self, grp: Group) -> bool:
+        return self._saturated(grp) or self._quota_blocked(grp)
+
+    def _refill_quota_locked(self) -> None:
+        if self.tenants:
+            now = self._now()
+            for acct in self.tenants.values():
+                acct.refill(now)
 
     @staticmethod
     def _spread(loads: List[int], k: int) -> List[int]:
@@ -866,14 +959,100 @@ class LcapProxy:
         total = len(batch)
         idx = batch.indices_np().astype(np.int64)
         types: Optional[np.ndarray] = None
+        jobids: Optional[np.ndarray] = None
         dispatched = 0
         filtered_out = 0
+        tenant_filtered = 0
         all_rows = np.arange(total)
+
+        def jobid_cols() -> np.ndarray:
+            # one jobid gather per batch, shared by every scoped
+            # consumer in this call: the uint64 word form when every
+            # scope fits a machine word (the overwhelmingly common
+            # case), else a byte matrix trimmed to the widest scope
+            # entry (NUL padding makes the tail bytes redundant)
+            w = 1
+            word = True
+            for g2 in groups:
+                for m2 in g2.members.values():
+                    if m2.alive and m2.tenant is not None:
+                        w = max(w, m2.tenant.mask_width)
+                        word = word and m2.tenant.word_scoped
+            for c2 in ephemerals:
+                if c2.tenant is not None:
+                    w = max(w, c2.tenant.mask_width)
+                    word = word and c2.tenant.word_scoped
+            return batch.jobid_word() if word else batch.jobid_col(w)
         for g in groups:
             live = [m for m in g.members.values() if m.alive]
             tracker = g.tracker(pid)
             tracker.deliver_many(idx)
-            if any(m.types is not None for m in live):
+            scoped = any(m.tenant is not None for m in live)
+            if scoped and len(live) == 1:
+                # the common shape — one scoped member — needs no
+                # bitset partition: one scope mask, a two-way split
+                # (and no split at all when every row is in scope)
+                m = live[0]
+                if jobids is None:
+                    jobids = jobid_cols()
+                sm = m.tenant.scope_mask(jobids)
+                if m.types is not None:
+                    if types is None:
+                        types = batch.types_np()
+                    tm = np.isin(types, sorted(m.types))
+                    sm &= tm
+                    nf = int(tm.sum() - sm.sum())
+                else:
+                    nf = int(total - sm.sum())
+                tenant_filtered += nf
+                if nf and m.account is not None:
+                    m.account.filtered_records += nf
+                if sm.all():
+                    parts = [(live, all_rows)]
+                else:
+                    parts = [(live, np.flatnonzero(sm)),
+                             ([], np.flatnonzero(~sm))]
+            elif scoped:
+                # tenant pushdown: eligibility depends on (type, jobid),
+                # so rows partition by the per-member eligibility bitset
+                # — one vectorized scope mask per scoped member, one
+                # water-fill per distinct set, never per record
+                if types is None:
+                    types = batch.types_np()
+                if jobids is None:
+                    jobids = jobid_cols()
+                key = np.zeros(total, dtype=np.int64)
+                key_any = np.zeros(total, dtype=bool)  # type-eligible only
+                for bit, m in enumerate(live):
+                    if m.types is None and m.tenant is None:
+                        key |= np.int64(1) << bit
+                        key_any[:] = True
+                        continue
+                    if m.types is not None:
+                        tmask = np.isin(types, sorted(m.types))
+                    else:
+                        tmask = np.ones(total, dtype=bool)
+                    key_any |= tmask
+                    if m.tenant is not None:
+                        sm = tmask & m.tenant.scope_mask(jobids)
+                        if m.account is not None:
+                            nf = int(tmask.sum() - sm.sum())
+                            if nf:
+                                m.account.filtered_records += nf
+                        tmask = sm
+                    key |= tmask.astype(np.int64) << bit
+                parts = []
+                for k in np.unique(key).tolist():
+                    rows = np.flatnonzero(key == k)
+                    members = [m for bit, m in enumerate(live)
+                               if (k >> bit) & 1]
+                    if not members:
+                        # out-of-scope rows a type-eligible member would
+                        # otherwise have received: the tenant mask (not
+                        # the type mask) is what acked them in place
+                        tenant_filtered += int(key_any[rows].sum())
+                    parts.append((members, rows))
+            elif any(m.types is not None for m in live):
                 if types is None:
                     types = batch.types_np()
                 # rows partition by *eligible member set*: one water-fill
@@ -906,6 +1085,8 @@ class LcapProxy:
                                           idx[sel])
                     m.in_flight.add_chunk(pid, sub, idx[sel])
                     m.delivered += cnt
+                    if m.account is not None:
+                        m.account.charge(cnt, sub.nbytes)
                     dispatched += cnt
         for c in ephemerals:
             mask = idx > c.since.get(pid, -1)   # type: ignore[attr-defined]
@@ -913,11 +1094,24 @@ class LcapProxy:
                 if types is None:
                     types = batch.types_np()
                 mask &= np.isin(types, sorted(c.types))
+            if c.tenant is not None:
+                if jobids is None:
+                    jobids = jobid_cols()
+                sm = mask & c.tenant.scope_mask(jobids)
+                if c.account is not None:
+                    nf = int(mask.sum() - sm.sum())
+                    if nf:
+                        c.account.filtered_records += nf
+                mask = sm
             rows = np.flatnonzero(mask)
             if not rows.size:
                 continue
             sub = batch if rows.size == total else batch.select(rows)
             c.outbox.append_chunk(pid, sub.project(c.flags), idx[rows])
+            if c.account is not None:
+                c.account.charge(rows.size, sub.nbytes)
+        if tenant_filtered:
+            self.stats["tenant_filtered"] += tenant_filtered
         return dispatched, filtered_out
 
     def _dispatch(self) -> int:
@@ -926,6 +1120,11 @@ class LcapProxy:
         groups = list(self.groups.values())
         ephemerals = [c for c in self.consumers.values()
                       if c.mode == EPHEMERAL and c.alive]
+        # per-tenant quota: refill the token buckets once per dispatch;
+        # a group whose tenant is over quota parks exactly like a group
+        # with a saturated member (the same backpressure path) and
+        # drains again as the buckets refill
+        self._refill_quota_locked()
         # backpressure is per *group*: a group with a saturated member
         # parks its records under grp.pending while the other groups
         # keep draining.  Groups that have recovered drain their parked
@@ -933,13 +1132,20 @@ class LcapProxy:
         for g in groups:
             if not any(m.alive for m in g.members.values()):
                 continue    # memberless: records stay parked until join
-            while g.pending and not self._saturated(g):
+            while g.pending and not self._blocked(g):
                 pid, idx, buf = g.pending.popleft()
                 self._dispatch_to_group(g, pid, idx, buf)
         n_sat = 0
         states_sat = {}
         for g in groups:
-            states_sat[g.name] = s = self._saturated(g)
+            s = self._saturated(g)
+            if not s and self._quota_blocked(g):
+                s = True
+                for m in g.members.values():
+                    if m.alive and m.account is not None \
+                            and m.account.exhausted:
+                        m.account.quota_blocked_pumps += 1
+            states_sat[g.name] = s
             n_sat += s
         # every group saturated: stall the whole dispatch — requeued
         # batch views are cheaper than per-record parked copies, and
@@ -976,15 +1182,17 @@ class LcapProxy:
             # per-(batch, group) state — membership cannot change while
             # the proxy lock is held: [group, tracker, live members,
             # pushdown active, rtype -> eligible-members cache,
-            # saturated]
+            # saturated, tenant-scoped]
             states = []
             for g in groups:
                 live = [m for m in g.members.values() if m.alive]
                 states.append([g, g.tracker(pid), live,
                                any(m.types is not None for m in live), {},
-                               states_sat[g.name]])
+                               states_sat[g.name],
+                               any(m.tenant is not None for m in live)])
             need_type = any(st[3] for st in states) or \
                 any(c.types is not None for c in ephemerals)
+            pjobid = R.packed_jobid
             packed_index = batch.packed_index
             packed_type = batch.packed_type
             packed = batch.packed
@@ -996,8 +1204,10 @@ class LcapProxy:
                 # pushdown means a record may reach no outbox at all:
                 # materialize the packed bytes only on first real use
                 buf = None
+                jb = None          # lazily extracted jobid, shared by groups
                 for st in states:
-                    grp, tracker, live, filtered, eligible, full_g = st
+                    grp, tracker, live, filtered, eligible, full_g, \
+                        scoped = st
                     tracker.deliver(idx)
                     if not live or full_g:
                         # no member yet, or per-group backpressure:
@@ -1028,6 +1238,26 @@ class LcapProxy:
                             continue
                     else:
                         want = live
+                    if scoped:
+                        # tenant pushdown, scalar flavor: out-of-scope
+                        # records are acked in place for the scoped
+                        # members, never copied
+                        if buf is None:
+                            buf = packed(i)
+                        if jb is None:
+                            jb = pjobid(buf)
+                        kept = []
+                        for m in want:
+                            if m.tenant is None or m.tenant.allows(jb):
+                                kept.append(m)
+                            elif m.account is not None:
+                                m.account.filtered_records += 1
+                        if not kept:
+                            tracker.ack(idx)
+                            filtered_out += 1
+                            self.stats["tenant_filtered"] += 1
+                            continue
+                        want = kept
                     cons = want[0] if len(want) == 1 else min(want,
                                                               key=by_load)
                     if buf is None:
@@ -1035,6 +1265,8 @@ class LcapProxy:
                     cons.outbox.append((pid, idx, stamp(cons, buf)))
                     cons.in_flight[(pid, idx)] = buf
                     cons.delivered += 1
+                    if cons.account is not None:
+                        cons.account.charge(1, len(buf))
                     dispatched += 1
                     if len(cons.outbox) >= cap:
                         st[5] = True
@@ -1047,12 +1279,23 @@ class LcapProxy:
                         continue  # emitted before connection (§IV-B)
                     if not cons.wants(rtype):
                         continue  # pushdown for ephemerals: just skip
+                    if cons.tenant is not None:
+                        if buf is None:
+                            buf = packed(i)
+                        if jb is None:
+                            jb = pjobid(buf)
+                        if not cons.tenant.allows(jb):
+                            if cons.account is not None:
+                                cons.account.filtered_records += 1
+                            continue  # out of scope: skip, like the mask
                     if len(cons.outbox) >= cap:
                         self.stats["ephemeral_drops"] += 1   # radio semantics
                         continue
                     if buf is None:
                         buf = packed(i)
                     cons.outbox.append((pid, idx, stamp(cons, buf)))
+                    if cons.account is not None:
+                        cons.account.charge(1, len(buf))
                 n += 1
                 if halt or (quantum is not None and n >= quantum):
                     halt = True
@@ -1185,7 +1428,19 @@ class LcapProxy:
                             np.isin(batch.types_np(), sorted(cons.types)))
                         if len(rows) != len(batch):
                             batch = batch.select(rows)
+                    if cons.tenant is not None and len(batch):
+                        # replay honors the same scope pushdown as live
+                        # dispatch: history a tenant may not see never
+                        # leaves the proxy, even on bootstrap
+                        rows = np.flatnonzero(
+                            cons.tenant.scope_mask(batch.jobid_col()))
+                        if len(rows) != len(batch):
+                            self.stats["tenant_filtered"] += \
+                                len(batch) - len(rows)
+                            batch = batch.select(rows)
                     if len(batch):
+                        if cons.account is not None:
+                            cons.account.replayed_records += len(batch)
                         out.append((pid, batch.remap(cons.flags)))
                         taken += len(batch)
                     pos = min(nxt, hw + 1)
@@ -1381,6 +1636,18 @@ class LcapProxy:
             consumers = [(c.cid, c.group or "", c.mode, len(c.outbox),
                           len(c.in_flight)) for c in self.consumers.values()
                          if c.alive]
+            live_by_tenant: Dict[str, int] = {}
+            for c in self.consumers.values():
+                if c.alive and c.tenant is not None:
+                    live_by_tenant[c.tenant.name] = \
+                        live_by_tenant.get(c.tenant.name, 0) + 1
+            tenants = [(a.name, a.delivered_records, a.delivered_bytes,
+                        a.replayed_records, a.filtered_records,
+                        a.quota_blocked_pumps,
+                        a.record_bucket.level if a.record_bucket else None,
+                        a.byte_bucket.level if a.byte_bucket else None,
+                        live_by_tenant.get(a.name, 0))
+                       for a in self.tenants.values()]
             ingested_hw = dict(self.ingested)
             upstream = dict(self.upstream_acked)
         out = []
@@ -1426,6 +1693,34 @@ class LcapProxy:
                         "records staged for fetch", lb, outbox))
             out.append(("lcap_consumer_in_flight", "gauge",
                         "records fetched but uncommitted", lb, infl))
+        for (tname, deliv, nbytes, replayed, filtered, blocked,
+             rec_lvl, byte_lvl, live) in tenants:
+            lb = dict(base, tenant=tname)
+            out.append(("lcap_tenant_delivered_records_total", "counter",
+                        "records delivered to this tenant's consumers",
+                        lb, deliv))
+            out.append(("lcap_tenant_delivered_bytes_total", "counter",
+                        "payload bytes delivered to this tenant", lb,
+                        nbytes))
+            out.append(("lcap_tenant_replayed_records_total", "counter",
+                        "history-tier records replayed to this tenant",
+                        lb, replayed))
+            out.append(("lcap_tenant_filtered_records_total", "counter",
+                        "records this tenant's scope denied its "
+                        "consumers (acked in place)", lb, filtered))
+            out.append(("lcap_tenant_quota_blocked_pumps_total", "counter",
+                        "dispatch rounds this tenant's groups parked on "
+                        "quota", lb, blocked))
+            out.append(("lcap_tenant_consumers", "gauge",
+                        "live consumers under this tenant", lb, live))
+            if rec_lvl is not None:
+                out.append(("lcap_tenant_quota_level_records", "gauge",
+                            "record token-bucket level (<=0 parks)", lb,
+                            rec_lvl))
+            if byte_lvl is not None:
+                out.append(("lcap_tenant_quota_level_bytes", "gauge",
+                            "byte token-bucket level (<=0 parks)", lb,
+                            byte_lvl))
         return out
 
     def metrics_snapshot(self) -> Dict[str, dict]:

@@ -316,6 +316,17 @@ def packed_type(buf: bytes) -> int:
     return struct.unpack_from("<H", buf, 4)[0]
 
 
+def packed_jobid(buf: bytes) -> bytes:
+    """The CLF_JOBID extension of a packed record, NUL-trimmed
+    (``b""`` when the flag is absent) — the scalar twin of
+    ``RecordBatch.jobid_col`` for the per-record dispatch path."""
+    flags = struct.unpack_from("<H", buf, 2)[0]
+    if not flags & CLF_JOBID:
+        return b""
+    off = HDR_SIZE + (2 * _FID.size if flags & CLF_RENAME else 0)
+    return bytes(buf[off:off + _JOBID_LEN]).rstrip(b"\0")
+
+
 def normalize_flags(flags: Optional[int]) -> int:
     """The single place subscription flag masks are normalized: ``None``
     means "everything supported", unknown bits are masked off (a newer
@@ -487,6 +498,13 @@ WIRE_V2 = 2
 #: which stays far below this in any real batch
 WIRE2_MAGIC = 0xC015FEED
 
+#: first word of the optional origin trailer a v2 frame may carry
+#: *after* its payload.  ``from_wire`` computes every record offset
+#: from the lens table and never validates total blob length, so a
+#: receiver that predates the trailer simply never looks at it —
+#: batch-level origin tagging is backward compatible by construction.
+WIRE2_ORIGIN_MAGIC = 0xFEDE0716
+
 #: capability keys exchanged on the cluster control plane (the ``caps``
 #: verb, subscribe negotiation) and piggybacked on data-path replies:
 #: record-frame generation, deep-batched offer support, and the
@@ -524,7 +542,8 @@ _ZFILL_LEN = {CLF_RENAME: 2 * _FID.size, CLF_JOBID: _JOBID_LEN,
 
 
 class RecordBatch:
-    __slots__ = ("buf", "_off", "_len", "_recs", "_hdr", "_ext")
+    __slots__ = ("buf", "_off", "_len", "_recs", "_hdr", "_ext", "_pb",
+                 "origin")
 
     def __init__(self, buf: Buffer, offsets: Sequence[int],
                  lengths: Sequence[int]):
@@ -538,6 +557,11 @@ class RecordBatch:
         self._recs: Dict[int, ChangelogRecord] = {}
         self._hdr: Optional[np.ndarray] = None   # decoded header columns
         self._ext = None                         # cached extension layout
+        self._pb = None                          # cached payload-base view
+        #: which filesystem/cluster the batch came from — a *batch*-level
+        #: federation tag (one string per frame, never per-record bytes);
+        #: rides the v2 wire as a trailer old receivers ignore
+        self.origin: Optional[str] = None
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -574,6 +598,7 @@ class RecordBatch:
             sub = RecordBatch(self.buf, self._off[i], self._len[i])
             if self._hdr is not None:
                 sub._hdr = self._hdr[i]
+            sub.origin = self.origin
             return sub
         return self.packed(i)
 
@@ -616,15 +641,7 @@ class RecordBatch:
             if n == 0:
                 h = np.empty(0, HDR_DTYPE)
             else:
-                off = self._off_col()
-                buf = self.buf
-                if not _is_frozen(buf):
-                    lo = int(off.min())
-                    hi = int((off + self._len_col()).max())
-                    base = np.frombuffer(bytes(buf[lo:hi]), dtype=np.uint8)
-                    off = off - lo
-                else:
-                    base = np.frombuffer(buf, dtype=np.uint8)
+                base, off = self._payload_base()
                 gathered = base[off[:, None] + _HDR_RANGE]
                 h = gathered.view(HDR_DTYPE).reshape(n)
             self._hdr = h
@@ -659,15 +676,22 @@ class RecordBatch:
     # decode.  The aggregation tier folds whole batches through these.
     def _payload_base(self) -> Tuple[np.ndarray, np.ndarray]:
         """(uint8 view of the packed buffer, per-record offsets into
-        it).  Mutable buffers are region-copied like ``header()``."""
-        off = self._off_col()
-        buf = self.buf
-        if not _is_frozen(buf):
-            lo = int(off.min())
-            hi = int((off + self._len_col()).max())
-            return (np.frombuffer(bytes(buf[lo:hi]), dtype=np.uint8),
-                    off - lo)
-        return np.frombuffer(buf, dtype=np.uint8), off
+        it), cached — records are immutable once written, so the
+        snapshot a mutable (live-journal) buffer forces is taken once
+        per batch, not once per columnar gather."""
+        pb = self._pb
+        if pb is None:
+            off = self._off_col()
+            buf = self.buf
+            if not _is_frozen(buf):
+                lo = int(off.min())
+                hi = int((off + self._len_col()).max())
+                pb = (np.frombuffer(bytes(buf[lo:hi]), dtype=np.uint8),
+                      off - lo)
+            else:
+                pb = (np.frombuffer(buf, dtype=np.uint8), off)
+            self._pb = pb
+        return pb
 
     def _ext_off(self, flags: np.ndarray, upto: int) -> np.ndarray:
         """Per-row offset of fixed-position extension ``upto`` relative
@@ -686,19 +710,77 @@ class RecordBatch:
             return off
         raise KeyError(f"flag {upto:#x} has no fixed offset")
 
-    def jobid_col(self) -> np.ndarray:
-        """The CLF_JOBID extension as an ``(n, 32)`` uint8 matrix; rows
-        without the flag are all-zero (the empty jobid)."""
+    def jobid_col(self, width: int = _JOBID_LEN) -> np.ndarray:
+        """The CLF_JOBID extension as an ``(n, width)`` uint8 matrix;
+        rows without the flag are all-zero (the empty jobid).
+
+        ``width`` trims the gather to the leading bytes a caller will
+        actually compare (jobids are NUL-padded, so a prefix or
+        NUL-terminated-exact match never needs the full field) — the
+        tenant-scope pushdown asks only for its widest scope entry."""
         n = len(self)
-        out = np.zeros((n, _JOBID_LEN), dtype=np.uint8)
+        width = max(1, min(int(width), _JOBID_LEN))
+        out = np.zeros((n, width), dtype=np.uint8)
         if not n:
             return out
         flags = self.flags_np()
-        rows = np.flatnonzero((flags & CLF_JOBID) != 0)
+        has = (flags & CLF_JOBID) != 0
+        rows = np.flatnonzero(has)
         if rows.size:
-            base, _off, starts, _sizes, _name = self._layout()
-            jo = starts[CLF_JOBID][rows]
-            out[rows] = base[jo[:, None] + np.arange(_JOBID_LEN)]
+            # JOBID sits at a flag-computable offset (only RENAME
+            # precedes it), so the full extension walk ``_layout``
+            # performs is skipped on this per-dispatch path
+            base, off = self._payload_base()
+            jo = off + self._ext_off(flags, CLF_JOBID)
+            if width == 8 and base.size >= 8:
+                # the tenant-pushdown shape: one windowed gather, no
+                # index-matrix build or scatter.  Flagless rows gather
+                # whatever follows their header (clamped in-bounds)
+                # and are zeroed after; jobid-bearing rows always have
+                # the full 32-byte field behind ``jo``.
+                jo = np.minimum(jo, base.size - 8)
+                out = np.lib.stride_tricks.sliding_window_view(
+                    base, 8)[jo]
+                if rows.size != n:
+                    out[~has] = 0
+                return out
+            jo = jo[rows]
+            out[rows] = base[jo[:, None] + np.arange(width)]
+        return out
+
+    def jobid_word(self) -> np.ndarray:
+        """The leading 8 bytes of each record's CLF_JOBID field as one
+        native-endian uint64 per row (0 where the flag is absent) —
+        the word-at-a-time form of ``jobid_col`` the tenant pushdown
+        compares against ``TenantPrincipal`` masked-word tests.  One
+        1-D gather through an unaligned sliding uint64 view: no index
+        matrix, no ``(n, 8)`` intermediate."""
+        n = len(self)
+        out = np.zeros(n, dtype=np.uint64)
+        if not n:
+            return out
+        # densify the strided header field once: three flag tests over
+        # a contiguous copy beat one over the structured view
+        flags = np.ascontiguousarray(self.flags_np())
+        has = (flags & CLF_JOBID) != 0
+        all_flagged = bool(has.all())
+        if not all_flagged and not has.any():
+            return out
+        base, off = self._payload_base()
+        if base.size < 8:
+            col = self.jobid_col(8)
+            return np.ascontiguousarray(col).view(np.uint64).ravel()
+        if (flags & CLF_RENAME).any():
+            jo = off + self._ext_off(flags, CLF_JOBID)
+        else:                       # JOBID right past the fixed header
+            jo = off + np.int64(HDR_SIZE)
+        np.minimum(jo, base.size - 8, out=jo)
+        words = np.lib.stride_tricks.as_strided(
+            base[:(base.size // 8) * 8].view(np.uint64),
+            shape=(base.size - 7,), strides=(1,))
+        out = words[jo]
+        if not all_flagged:         # clamped garbage where no jobid
+            out[~has] = 0
         return out
 
     def shard_cols(self) -> Tuple[np.ndarray, np.ndarray]:
@@ -967,6 +1049,7 @@ class RecordBatch:
         keep = _as_i64(keep)
         sub = RecordBatch(self.buf, self._off_col()[keep],
                           self._len_col()[keep])
+        sub.origin = self.origin
         if self._hdr is not None:
             sub._hdr = self._hdr[keep]
         lay = self._ext
@@ -1022,6 +1105,9 @@ class RecordBatch:
             base += len(blob)
         out = RecordBatch(b"".join(blobs), np.concatenate(offs),
                           np.concatenate(lens))
+        origins = {b.origin for b in batches}
+        if len(origins) == 1:            # mixed-origin concat drops the tag
+            out.origin = origins.pop()
         if all(b._hdr is not None for b in batches):
             out._hdr = np.concatenate([b._hdr for b in batches])
         return out
@@ -1086,6 +1172,7 @@ class RecordBatch:
         out[fpos] = (want & 0xFF).astype(np.uint8)
         out[fpos + 1] = ((want >> 8) & 0xFF).astype(np.uint8)
         res = RecordBatch(out.tobytes(), out_off, out_len)
+        res.origin = self.origin
         new_hdr = hdr.copy()
         new_hdr["flags"] = want
         res._hdr = new_hdr
@@ -1129,12 +1216,19 @@ class RecordBatch:
     def to_wire2(self) -> bytes:
         """v2 frame: the decoded header table rides alongside the
         payload, so the receiver attaches the columns as a zero-copy
-        view instead of re-gathering 64 bytes per record."""
+        view instead of re-gathering 64 bytes per record.  A batch with
+        an ``origin`` tag appends it as a trailer past the payload —
+        one string per frame (never per-record bytes), invisible to
+        receivers that predate federation."""
         blob, _off, ln = self._compact()
         hdr = self.header()
-        return (struct.pack("<II", WIRE2_MAGIC, len(self))
-                + ln.astype("<u4").tobytes()
-                + (hdr.tobytes() if hdr.size else b"") + blob)
+        frame = (struct.pack("<II", WIRE2_MAGIC, len(self))
+                 + ln.astype("<u4").tobytes()
+                 + (hdr.tobytes() if hdr.size else b"") + blob)
+        if self.origin is not None:
+            tag = self.origin.encode("utf-8")
+            frame += struct.pack("<IH", WIRE2_ORIGIN_MAGIC, len(tag)) + tag
+        return frame
 
     @staticmethod
     def from_wire(blob: Buffer) -> "RecordBatch":
@@ -1160,4 +1254,12 @@ class RecordBatch:
         out = RecordBatch(blob, offsets, lengths)
         out._hdr = np.frombuffer(blob, dtype=HDR_DTYPE, count=n,
                                  offset=head)
+        # origin trailer past the payload (absent on pre-federation
+        # senders; record offsets never reach it either way)
+        end = head + HDR_SIZE * n + int(lengths.sum())
+        if len(blob) >= end + 6:
+            magic, tlen = struct.unpack_from("<IH", blob, end)
+            if magic == WIRE2_ORIGIN_MAGIC and len(blob) >= end + 6 + tlen:
+                out.origin = bytes(blob[end + 6:end + 6 + tlen]) \
+                    .decode("utf-8")
         return out

@@ -37,6 +37,7 @@ from typing import Dict
 from .errors import SessionError
 from .proxy import LcapProxy
 from .records import RecordBatch, WIRE_V1, WIRE_V2
+from .tenancy import TenantPrincipal
 from .transport import PROTOCOL_VERSION, RpcServer
 
 
@@ -83,7 +84,8 @@ class LcapService:
                     mode=msg.get("mode", "persistent"),
                     types=msg.get("types"), name=msg.get("name"),
                     resume=True if op == "resume" else msg.get("resume"),
-                    replay=msg.get("replay"))
+                    replay=msg.get("replay"),
+                    tenant=TenantPrincipal.from_wire(msg.get("tenant")))
                 session.setdefault("cids", set()).add(info["cid"])
                 # record-frame negotiation: fetch frames are emitted at
                 # the highest generation both sides speak (an old client

@@ -42,8 +42,9 @@ from typing import Any, Deque, Dict, Iterator, List, Optional, Tuple, Union
 
 from . import records as R
 from .errors import (SessionError, SubscriptionError,  # noqa: F401 (re-export)
-                     UnknownConsumerError, raise_reply_error)
+                     TenantError, UnknownConsumerError, raise_reply_error)
 from .proxy import EPHEMERAL, PERSISTENT, LcapProxy
+from .tenancy import TenantPrincipal
 from .transport import PROTOCOL_VERSION, RpcClient
 
 Address = Union[str, Tuple[str, int]]
@@ -71,6 +72,11 @@ class Subscription:
                  stream yields history batches first, then hands off to
                  the live stream at a recorded watermark (no gap, no
                  duplicate).  Requires a fresh group for persistent mode.
+    tenant       a ``TenantPrincipal`` (or its dict form) scoping the
+                 subscription to the tenant's jobid namespace.  Scope is
+                 enforced server-side at dispatch (pushdown): records
+                 outside it are acknowledged in place and never leave
+                 the proxy — isolation holds against impolite clients.
     """
 
     group: Optional[str] = None
@@ -82,10 +88,15 @@ class Subscription:
     max_records: int = 1024
     replay: Optional[Union[bool, int]] = None
     zero_fill: bool = True
+    tenant: Optional[TenantPrincipal] = None
 
     def __post_init__(self):
         if self.types is not None and not isinstance(self.types, frozenset):
             object.__setattr__(self, "types", frozenset(self.types))
+        if self.tenant is not None and \
+                not isinstance(self.tenant, TenantPrincipal):
+            object.__setattr__(self, "tenant",
+                               TenantPrincipal.from_wire(self.tenant))
         if self.mode == PERSISTENT and not self.group:
             raise SubscriptionError("persistent subscriptions need a group")
         if self.mode == EPHEMERAL and self.name:
@@ -107,7 +118,7 @@ class _LocalBackend:
         return self.proxy.attach(spec.group, flags=spec.flags,
                                  mode=spec.mode, types=spec.types,
                                  name=spec.name, resume=resume,
-                                 replay=spec.replay)
+                                 replay=spec.replay, tenant=spec.tenant)
 
     def fetch(self, cid: str, max_records: int,
               ) -> List[Tuple[str, R.RecordBatch]]:
@@ -177,6 +188,8 @@ class _WireBackend:
             "group": spec.group, "name": spec.name, "mode": spec.mode,
             "flags": spec.flags, "resume": resume, "replay": spec.replay,
             "types": sorted(spec.types) if spec.types is not None else None,
+            "tenant": spec.tenant.to_wire() if spec.tenant is not None
+            else None,
             # offer the column-bearing v2 record frame; an old server
             # ignores the key and keeps sending v1 (from_wire sniffs
             # the frame magic, so either way decodes transparently)

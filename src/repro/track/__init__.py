@@ -9,10 +9,11 @@ detector, the elastic controller, and serving-side cache invalidation
 """
 
 from .tracker import ActivityTracker
+from .audit import AuditTrail, JobTrail
 from .consumers import (CacheInvalidator, CheckpointCommitter, ElasticController,
                         MetricsDB, StragglerDetector)
 from .bootstrap import synthesize_index_stream
 
 __all__ = ["ActivityTracker", "MetricsDB", "CheckpointCommitter",
            "StragglerDetector", "ElasticController", "CacheInvalidator",
-           "synthesize_index_stream"]
+           "AuditTrail", "JobTrail", "synthesize_index_stream"]
